@@ -1,0 +1,60 @@
+"""Figs. 6 + 7 — Cholesky throughput (effective TFLOP/s) and speedup.
+
+Measured: CPU wall-time of tree-POTRF vs jnp.linalg.cholesky; effective
+GFLOP/s = (n^3/3) / t.
+Derived: v5e-modeled effective TFLOP/s and speedup over the uniform-f32
+tree (census compute+memory model), Fig. 6's "peak-utilization is not
+the right objective" trade-off reproduced as model numbers.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.util import emit, model_time_s, spd_matrix, timeit
+from repro.core import PrecisionConfig, census_potrf, cholesky
+
+CONFIGS = {
+    "f32": PrecisionConfig(levels=("f32",), leaf=128),
+    "f32x3_f64": PrecisionConfig(levels=("f32",) * 3 + ("f64",), leaf=128),
+    "bf16_f32": PrecisionConfig(levels=("bf16", "f32"), leaf=128),
+    "f16_f32": PrecisionConfig(levels=("f16", "f32"), leaf=128),
+    "f16x3_f32": PrecisionConfig(levels=("f16",) * 3 + ("f32",), leaf=128),
+    "f16x5_f32": PrecisionConfig(levels=("f16",) * 5 + ("f32",), leaf=128),
+    "pure_f16": PrecisionConfig(levels=("f16",), leaf=128),
+    # beyond-paper int8 ladder (v5e double-rate integer MXU path)
+    "int8x3_f32": PrecisionConfig(levels=("int8",) * 3 + ("f32",),
+                                  leaf=128),
+}
+
+
+def run(sizes=(512, 1024, 2048)):
+    for n in sizes:
+        a = spd_matrix(n)
+        flops = n ** 3 / 3
+
+        base = jax.jit(jnp.linalg.cholesky)
+        t_base = timeit(base, a)
+        emit(f"potrf_baseline_lapack_f32_n{n}", t_base,
+             f"gflops={flops / t_base / 1e3:.2f};speedup=1.00")
+
+        t32_model = model_time_s(census_potrf(n, CONFIGS["f32"]))
+        for name, cfg in CONFIGS.items():
+            if "f64" in name and not jax.config.jax_enable_x64:
+                continue
+            fn = jax.jit(functools.partial(cholesky, cfg=cfg))
+            t = timeit(fn, a)
+            cen = census_potrf(n, cfg)
+            tm = model_time_s(cen)
+            emit(f"potrf_tree_{name}_n{n}", t,
+                 f"gflops={flops / t / 1e3:.2f};"
+                 f"model_v5e_tflops={flops / tm / 1e12:.2f};"
+                 f"model_v5e_speedup={t32_model / tm:.2f};"
+                 f"cpu_speedup={t_base / t:.2f}")
+
+
+if __name__ == "__main__":
+    run()

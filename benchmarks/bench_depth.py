@@ -1,0 +1,41 @@
+"""Fig. 10 — Speedup scaling with matrix size / recursion depth.
+
+The paper's mechanism: larger matrices admit deeper recursion, which puts
+a larger fraction of FLOPs into low-precision off-diagonal GEMMs. That
+fraction (and the resulting modeled speedup) is computed exactly from the
+structural census — this is the size-scaling claim reproduced without GPU
+hardware. CPU wall-times for the same sweep show the recursion overhead
+staying sub-linear.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import numpy as np
+
+from benchmarks.util import emit, model_time_s, spd_matrix, timeit
+from repro.core import PrecisionConfig, census_potrf, cholesky
+
+
+def run(sizes=(256, 512, 1024, 2048, 4096, 8192, 16384, 32768, 65536)):
+    for n in sizes:
+        cfg = PrecisionConfig(levels=("f16",) * 5 + ("f32",), leaf=256)
+        cen = census_potrf(n, cfg)
+        t32 = model_time_s(census_potrf(n, PrecisionConfig(
+            levels=("f32",), leaf=256)))
+        tm = model_time_s(cen)
+        depth = cfg.depth(n)
+        if n <= 2048:  # wall-clock on CPU for the small end
+            fn = jax.jit(functools.partial(cholesky, cfg=cfg))
+            t = timeit(fn, spd_matrix(n))
+        else:
+            t = 0.0
+        emit(f"depth_scaling_n{n}", t,
+             f"depth={depth};lowp_frac={cen.lowp_fraction():.4f};"
+             f"gemm_frac={cen.gemm_fraction:.4f};"
+             f"model_v5e_speedup={t32 / tm:.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,47 @@
+"""Beyond-paper: multi-chip block-panel Cholesky (core.distributed).
+
+Runs the shard_map solver on 8 forced host devices, checks exactness vs
+the single-device tree, and times both collective schedules (gather-panel
+vs diag-broadcast) — the §Perf hillclimb lever for the solver.
+Requires a session started with --xla_force_host_platform_device_count=8;
+skips otherwise (benchmarks/run.py launches it correctly).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from benchmarks.util import emit, spd_matrix, timeit
+from repro.core import PrecisionConfig, cholesky
+from repro.core.distributed import dist_cholesky
+
+
+def run(sizes=(1024, 2048)):
+    if jax.device_count() < 8:
+        emit("dist_cholesky", 0.0, "skipped=needs_8_devices")
+        return
+    mesh = jax.make_mesh((8,), ("model",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    cfg = PrecisionConfig(levels=("f32",), leaf=128)
+    for n in sizes:
+        a = spd_matrix(n)
+        a_sh = jax.device_put(a, NamedSharding(mesh, P("model", None)))
+        with mesh:
+            for tag, bd in (("bcast_diag", True), ("gather_panel", False)):
+                fn = jax.jit(functools.partial(
+                    dist_cholesky, mesh=mesh, cfg=cfg,
+                    broadcast_diag_only=bd))
+                t = timeit(fn, a_sh, warmup=1, iters=3)
+                emit(f"dist_potrf_{tag}_n{n}_p8", t, "devices=8")
+            l = np.asarray(fn(a_sh), np.float64)
+        ref = np.asarray(jax.jit(functools.partial(cholesky, cfg=cfg))(a),
+                         np.float64)
+        rel = np.abs(l - ref).max() / np.abs(ref).max()
+        emit(f"dist_potrf_agreement_n{n}", 0.0, f"rel={rel:.2e}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,56 @@
+"""Fig. 5 — Recursive TRSM speedup (X = B L^{-T}).
+
+Measured: CPU wall-time of tree-TRSM vs jax.scipy solve_triangular.
+Derived: v5e-modeled speedup (census) + GEMM fraction per config.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.util import emit, model_time_s, timeit
+from repro.core import PrecisionConfig, census_trsm, tree_trsm
+
+CONFIGS = {
+    "f32": PrecisionConfig(levels=("f32",), leaf=128),
+    "bf16_f32": PrecisionConfig(levels=("bf16", "f32"), leaf=128),
+    "f16_f32": PrecisionConfig(levels=("f16", "f32"), leaf=128),
+    "f16x3_f32": PrecisionConfig(levels=("f16",) * 3 + ("f32",), leaf=128),
+    "pure_f16": PrecisionConfig(levels=("f16",), leaf=128),
+}
+
+
+def run(sizes=(512, 1024, 2048)):
+    for n in sizes:
+        m = n
+        rng = np.random.default_rng(0)
+        l = np.tril(rng.standard_normal((n, n))).astype(np.float32)
+        l[np.diag_indices(n)] += n ** 0.5
+        b = rng.standard_normal((m, n)).astype(np.float32)
+
+        def base_fn(b, l):
+            y = jax.scipy.linalg.solve_triangular(l, b.T, lower=True)
+            return y.T
+
+        base = jax.jit(base_fn)
+        t_base = timeit(base, b, l)
+        emit(f"trsm_baseline_lapack_f32_n{n}", t_base, "speedup=1.00")
+
+        cen32 = census_trsm(m, n, CONFIGS["f32"])
+        t32_model = model_time_s(cen32)
+        for name, cfg in CONFIGS.items():
+            fn = jax.jit(functools.partial(tree_trsm, cfg=cfg))
+            t = timeit(fn, b, l)
+            cen = census_trsm(m, n, cfg)
+            model_speedup = t32_model / model_time_s(cen)
+            emit(f"trsm_tree_{name}_n{n}", t,
+                 f"model_v5e_speedup={model_speedup:.2f};"
+                 f"gemm_frac={cen.gemm_fraction:.3f};"
+                 f"cpu_speedup={t_base / t:.2f}")
+
+
+if __name__ == "__main__":
+    run()

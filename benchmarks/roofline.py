@@ -1,0 +1,124 @@
+"""Roofline analysis (assignment §ROOFLINE ANALYSIS).
+
+Reads experiments/dryrun/<cell>.json (produced by repro.launch.dryrun)
+and derives, per (arch x shape x mesh):
+
+  compute term    = HLO_FLOPs / (chips * 197e12)         [s]
+  memory term     = HLO_bytes / (chips * 819e9)          [s]
+  collective term = collective_bytes / (chips * 50e9)    [s]
+
+HLO_FLOPs/bytes come from the while-trip-corrected HLO census (the raw
+cost_analysis numbers are also recorded; they undercount scan bodies —
+see tests/test_roofline.py). The census is per device, so terms divide
+by 1, not chips; we report both per-device seconds and the global
+MODEL_FLOPS ratio.
+
+MODEL_FLOPS: 6*N*D for dense training (N = params, D = tokens), with the
+MoE active-parameter correction; for inference: 2*N*D (fwd only).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK = 197e12        # bf16 FLOP/s per chip
+HBM = 819e9          # B/s per chip
+ICI = 50e9           # B/s per link
+
+_ACTIVE_FRACTION = {  # active params / total params (MoE)
+    "deepseek-v2-lite-16b": 0.165,   # ~2.6B active^ /15.7B
+    "deepseek-v3-671b": 0.055,       # ~37B active /671B
+}
+
+
+def model_flops(rec) -> float:
+    n = rec["n_params"]
+    arch = rec["arch"]
+    n_active = n * _ACTIVE_FRACTION.get(arch, 1.0)
+    shape = rec["shape"]
+    if shape.startswith("train"):
+        tokens = 4096 * 256
+        return 6.0 * n_active * tokens
+    if shape.startswith("prefill"):
+        tokens = 32768 * 32
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    batch = 1 if shape.startswith("long") else 128
+    return 2.0 * n_active * batch
+
+
+def analyze(rec) -> dict:
+    chips = rec["n_devices"]
+    flops_dev = rec["census"]["flops"]
+    bytes_dev = rec["census"]["hbm_bytes"]
+    coll_dev = sum(v["bytes"] for v in rec["collectives"].values())
+    t_c = flops_dev / PEAK
+    t_m = bytes_dev / HBM
+    t_x = coll_dev / ICI
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))[1]
+    mf = model_flops(rec)
+    hlo_global = flops_dev * chips
+    out = {
+        "arch": rec["arch"], "shape": rec["shape"],
+        "mesh": "2x16x16" if rec["multi_pod"] else "16x16",
+        "chips": chips,
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+        "dominant": dom,
+        "model_flops": mf,
+        "hlo_flops_global": hlo_global,
+        "useful_ratio": mf / hlo_global if hlo_global else 0.0,
+        "roofline_fraction": t_c / max(t_c + t_m + t_x, 1e-30),
+        "gib_per_dev": rec["per_device_bytes"] / 2**30,
+        "step_time_lb_s": max(t_c, t_m, t_x),
+        "kfac": rec.get("kfac", False),
+    }
+    # effective MFU proxy: useful model flops / (chips*peak*step_time)
+    out["mfu_model"] = mf / (chips * PEAK * max(out["step_time_lb_s"],
+                                                1e-30))
+    return out
+
+
+def load(dirpath="experiments/dryrun"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def run_csv(dirpath="experiments/dryrun"):
+    for rec in load(dirpath):
+        a = analyze(rec)
+        tag = ("kfac-" if a["kfac"] else "") + \
+            f"roofline_{a['arch']}_{a['shape']}_{a['mesh']}"
+        print(f"{tag},0.0,"
+              f"compute_s={a['compute_s']:.4f};memory_s={a['memory_s']:.4f};"
+              f"collective_s={a['collective_s']:.4f};dom={a['dominant']};"
+              f"useful={a['useful_ratio']:.3f};mfu={a['mfu_model']:.3f};"
+              f"GiB/dev={a['gib_per_dev']:.2f}")
+
+
+def markdown_table(dirpath="experiments/dryrun"):
+    rows = [analyze(r) for r in load(dirpath)]
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"], r["kfac"]))
+    out = ["| arch | shape | mesh | compute s | memory s | collective s |"
+           " dominant | useful | MFU* | GiB/dev |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for a in rows:
+        name = ("KFAC:" if a["kfac"] else "") + a["arch"]
+        out.append(
+            f"| {name} | {a['shape']} | {a['mesh']} | "
+            f"{a['compute_s']:.4f} | {a['memory_s']:.4f} | "
+            f"{a['collective_s']:.4f} | {a['dominant']} | "
+            f"{a['useful_ratio']:.3f} | {a['mfu_model']:.3f} | "
+            f"{a['gib_per_dev']:.2f} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    import sys
+    if len(sys.argv) > 1 and sys.argv[1] == "--markdown":
+        print(markdown_table())
+    else:
+        run_csv()

@@ -1,0 +1,56 @@
+"""Benchmark aggregator: one bench per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (assignment contract).
+
+  bench_syrk         Fig. 4   recursive SYRK speedup
+  bench_trsm         Fig. 5   recursive TRSM speedup
+  bench_cholesky     Fig. 6/7 Cholesky throughput + speedup
+  bench_accuracy     Fig. 8   precision-ladder digits (x64 subprocess)
+  bench_depth        Fig. 10  size/depth scaling
+  bench_portability  Fig. 9/11 backend dispatch agreement
+  bench_dist         beyond-paper multi-chip solver (8-dev subprocess)
+
+Accuracy and distributed benches need different process-level settings
+(x64 / forced device count), so run.py re-execs them as subprocesses.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+
+def _sub(module: str, env_extra: dict):
+    env = dict(os.environ)
+    env.setdefault("PYTHONPATH", "src")
+    env.update(env_extra)
+    r = subprocess.run([sys.executable, "-m", module], env=env,
+                       capture_output=True, text=True, timeout=3000)
+    sys.stdout.write(r.stdout)
+    if r.returncode != 0:
+        sys.stdout.write(f"{module},0.0,FAILED\n")
+        sys.stderr.write(r.stderr[-2000:])
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    from benchmarks import (bench_cholesky, bench_depth, bench_portability,
+                            bench_syrk, bench_trsm)
+    bench_syrk.run()
+    bench_trsm.run()
+    bench_cholesky.run()
+    bench_depth.run()
+    bench_portability.run()
+    _sub("benchmarks.bench_accuracy", {"JAX_ENABLE_X64": "1"})
+    _sub("benchmarks.bench_dist",
+         {"XLA_FLAGS": "--xla_force_host_platform_device_count=8"})
+    # roofline table (reads experiments/dryrun if present)
+    try:
+        from benchmarks import roofline
+        roofline.run_csv()
+    except Exception as e:  # noqa: BLE001
+        print(f"roofline,0.0,unavailable({type(e).__name__})")
+
+
+if __name__ == "__main__":
+    main()

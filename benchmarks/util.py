@@ -1,0 +1,56 @@
+"""Shared benchmark utilities: timing + CSV emission + TPU model.
+
+Every bench prints ``name,us_per_call,derived`` rows (assignment
+contract). Wall times are CPU (this container); the `derived` column
+carries the figure-specific quantity (speedup, digits, modeled TPU
+speedup, flop fractions). TPU-projected numbers come from the structural
+census (repro.core.census) + v5e peaks and are always labelled model_*.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core.precision import PEAK_FLOPS
+
+HBM_BW = 819e9          # bytes/s per chip (v5e)
+
+
+def timeit(fn, *args, warmup=2, iters=5):
+    """Median wall-time in microseconds of a jitted callable."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def emit(name: str, us: float, derived):
+    print(f"{name},{us:.1f},{derived}")
+
+
+def spd_matrix(n, dtype=np.float32, seed=0):
+    """Paper §IV-A: uniform entries, +n on the diagonal."""
+    rng = np.random.default_rng(seed)
+    m = rng.uniform(-1.0, 1.0, (n, n))
+    a = (m + m.T) / 2
+    a[np.diag_indices(n)] += n
+    return a.astype(dtype)
+
+
+def model_time_s(census, *, include_memory=True):
+    """v5e time model from a structural census: compute term per
+    precision level + HBM term (bf16/f16 halve the bytes)."""
+    t = 0.0
+    for k, v in census.gemm_flops.items():
+        t += v / PEAK_FLOPS[k]
+    for k, v in census.leaf_flops.items():
+        t += v / PEAK_FLOPS[k]
+    if include_memory:
+        t += sum(census.gemm_bytes.values()) / HBM_BW
+    return t

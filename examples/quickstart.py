@@ -1,0 +1,36 @@
+"""Quickstart: solve an SPD system with the mixed-precision recursive
+Cholesky solver (the paper's contribution, 10 lines of user code).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import PAPER_CONFIGS, PrecisionConfig, cholesky, \
+    cholesky_solve
+
+# Build the paper's benchmark matrix: uniform entries, +n on the diagonal
+n = 1024
+rng = np.random.default_rng(0)
+m = rng.uniform(-1, 1, (n, n))
+a = (m + m.T) / 2 + n * np.eye(n)
+a = a.astype(np.float32)
+x_true = rng.standard_normal((n, 4)).astype(np.float32)
+b = a @ x_true
+
+print("precision ladder (paper Fig. 2/8):")
+for name in ("pure_f32", "bf16_f32", "f16_f32", "f16x3_f32", "pure_f16"):
+    cfg = PAPER_CONFIGS[name]
+    cfg = PrecisionConfig(levels=cfg.levels, leaf=128)
+    x = np.asarray(cholesky_solve(a, b, cfg))
+    err = np.abs(x - x_true).max() / np.abs(x_true).max()
+    print(f"  {cfg.describe():38s} solve relerr = {err:.2e}")
+
+# quantization saves badly-scaled systems (paper §III-D)
+a_big = a * 1e6
+l_q = np.asarray(cholesky(a_big, PrecisionConfig(
+    levels=("f16", "f32"), leaf=128, quantize=True)))
+l_n = np.asarray(cholesky(a_big, PrecisionConfig(
+    levels=("f16", "f32"), leaf=128, quantize=False)))
+print(f"\n||A||~1e9, f16 levels: quantize=True finite: "
+      f"{np.isfinite(l_q).all()}, quantize=False finite: "
+      f"{np.isfinite(l_n).all()}  (paper Fig. 3)")

@@ -1,0 +1,81 @@
+"""End-to-end training driver: a ~100M-parameter dense LM trained for a
+few hundred steps with the TreeNewton optimizer — the paper's solver
+factorizing the Kronecker preconditioner blocks every ``factor_every``
+steps — with checkpoint/resume and an AdamW comparison.
+
+    PYTHONPATH=src python examples/train_kfac.py \
+        [--steps 300] [--optimizer tree_newton|adamw] [--resume]
+
+CPU note: ~100M params trains at a few steps/s here; the same script on
+a TPU pod only changes the mesh/sharder wiring (see repro/launch).
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import checkpoint as ckpt
+from repro.data import SyntheticLM
+from repro.models.common import ModelConfig
+from repro.optim import AdamWConfig, TreeNewtonConfig
+from repro.train import TrainConfig, init_state, make_train_step
+
+
+def model_100m():
+    return ModelConfig(
+        name="lm-100m", family="dense", n_layers=8, d_model=512,
+        d_ff=2048, vocab=32768, n_heads=8, n_kv=4, mlp="swiglu",
+        max_seq=512, remat=False)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--optimizer", default="tree_newton",
+                    choices=("tree_newton", "adamw"))
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = model_100m()
+    adam = AdamWConfig(lr=3e-3, warmup=20, total_steps=args.steps)
+    tn = TreeNewtonConfig(adam=adam, block=256, factor_every=20,
+                          stats_every=2)
+    tcfg = TrainConfig(optimizer=args.optimizer, adam=adam, tree_newton=tn)
+
+    state = init_state(jax.random.PRNGKey(0), cfg, tcfg)
+    n = sum(x.size for x in jax.tree.leaves(state["params"]))
+    print(f"model: {n / 1e6:.1f}M params, optimizer={args.optimizer}")
+
+    start = 0
+    if args.resume and ckpt.latest_step(args.ckpt_dir) is not None:
+        state, start = ckpt.restore(args.ckpt_dir, state)
+        print(f"resumed from step {start}")
+
+    data = SyntheticLM(cfg.vocab, args.batch, args.seq, seed=0)
+    step_fn = jax.jit(make_train_step(cfg, tcfg), donate_argnums=(0,))
+
+    t0 = time.time()
+    handle = None
+    for i in range(start, args.steps):
+        batch = jax.tree.map(jnp.asarray, data.get(i))
+        state, m = step_fn(state, batch)
+        if (i + 1) % 20 == 0:
+            dt = (time.time() - t0) / (i + 1 - start)
+            print(f"step {i + 1:4d}  loss={float(m['loss']):7.4f}  "
+                  f"gnorm={float(m['grad_norm']):7.3f}  "
+                  f"lr={float(m['lr']):.2e}  {dt * 1e3:6.0f} ms/step")
+        if (i + 1) % args.ckpt_every == 0:
+            handle = ckpt.save(args.ckpt_dir, i + 1, state)  # async
+    if handle:
+        handle.wait()
+    print("done; resume any time with --resume "
+          f"(checkpoints in {args.ckpt_dir})")
+
+
+if __name__ == "__main__":
+    main()

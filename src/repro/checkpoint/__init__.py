@@ -1,0 +1,2 @@
+from repro.checkpoint.checkpoint import (latest_step, restore,  # noqa: F401
+                                         save)

@@ -1,0 +1,31 @@
+"""repro.core — the paper's contribution as a composable JAX module.
+
+Public API:
+  PrecisionConfig, PAPER_CONFIGS      — layered precision ladders
+  cholesky, cholesky_solve, logdet    — mixed-precision SPD solver
+  tree_potrf, tree_trsm, tree_syrk    — the nested recursive routines
+  quant_block / dequant               — per-block quantization
+  census_*                            — structural FLOP/byte census
+  distributed (module)                — shard_map block-panel Cholesky
+"""
+from repro.core.precision import (DTYPES, PAPER_CONFIGS, PEAK_FLOPS, RMAX,
+                                  PrecisionConfig)
+from repro.core.quantize import (dequant, dequant_int8, quant_block,
+                                 quant_int8)
+from repro.core.solve import (cholesky, cholesky_jit, cholesky_solve,
+                              cholesky_solve_jit, logdet, solve_factored)
+from repro.core.tree import (pad_spd, tree_potrf, tree_trsm, tree_trsm_left,
+                             tree_syrk)
+from repro.core.census import Census, census_potrf, census_syrk, census_trsm
+from repro.core.treematrix import (TreeSPD, storage_ratio,
+                                   tree_potrf_packed)
+
+__all__ = [
+    "DTYPES", "PAPER_CONFIGS", "PEAK_FLOPS", "RMAX", "PrecisionConfig",
+    "dequant", "dequant_int8", "quant_block", "quant_int8",
+    "cholesky", "cholesky_jit", "cholesky_solve", "cholesky_solve_jit",
+    "logdet", "solve_factored",
+    "pad_spd", "tree_potrf", "tree_trsm", "tree_trsm_left", "tree_syrk",
+    "Census", "census_potrf", "census_syrk", "census_trsm",
+    "TreeSPD", "storage_ratio", "tree_potrf_packed",
+]

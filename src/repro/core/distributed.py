@@ -1,0 +1,182 @@
+"""Multi-chip distributed Cholesky via shard_map (DESIGN.md §4.4).
+
+1-D block-row layout: device i of the ``axis`` mesh axis owns rows
+[i*w, (i+1)*w) of the global (n, n) SPD matrix, w = n/P. The factorization
+is a right-looking panel sweep whose *step loop unrolls at trace time*
+(P is static), so every trailing update has exact static shapes — no
+masked FLOP waste.
+
+Per panel j:
+  1. all-gather the raw column panel            (comm: n*w)
+  2. every device factorizes the (w, w) diagonal block redundantly with
+     the paper's tree-POTRF (tiny vs the panel) and tree-TRSMs its own
+     row block                                   (compute: w^3/3 + w^3)
+  3. all-gather the solved panel                 (comm: n*w)
+  4. local trailing GEMM update of its rows (qgemm, mixed precision)
+
+The local POTRF/TRSM/GEMM are exactly the paper's recursive mixed-
+precision routines, so the precision ladder applies unchanged on every
+shard. Collective cost 2*n*w per step is the §Perf hillclimb target
+(EXPERIMENTS.md: replace gather-1 with a (w,w) ppermute broadcast).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.precision import PrecisionConfig
+from repro.core.quantize import quant_block
+from repro.core.tree import tree_potrf, tree_trsm, tree_trsm_left
+from repro.kernels import ops
+
+
+def _local_potrf(a_local, *, axis: str, nshards: int, cfg: PrecisionConfig,
+                 broadcast_diag_only: bool, compress_comm: bool):
+    w, n = a_local.shape
+    my = jax.lax.axis_index(axis)
+    for j in range(nshards):
+        colpanel = a_local[:, j * w:(j + 1) * w]                 # (w, w)
+        if broadcast_diag_only:
+            # Optimized collective schedule (§Perf C1): only the owner's
+            # (w, w) diagonal block is broadcast (psum of a masked block),
+            # saving the first n*w all-gather.
+            mine = jnp.where(my == j, colpanel, jnp.zeros_like(colpanel))
+            diag = jax.lax.psum(mine, axis)
+        else:
+            allpan = jax.lax.all_gather(colpanel, axis)          # (P, w, w)
+            diag = allpan[j]
+        ld = tree_potrf(diag, cfg)                               # redundant
+        li = tree_trsm(colpanel, ld, cfg)
+        li = jnp.where(my == j, ld, li)
+        name = cfg.name_at(0)
+        q = cfg.needs_quant(0)
+        if compress_comm and j < nshards - 1:
+            # §Perf C2: the trailing update consumes the gathered panel
+            # at the level-0 precision anyway — so quantize BEFORE the
+            # all-gather (the paper's per-block quantization applied to
+            # the collective): halves the dominant n*w term at zero
+            # extra rounding vs the in-compute quantization. Per-shard
+            # scales travel as (P,) f32 and rescale the GEMM output
+            # column blocks.
+            liq, s1 = quant_block(li, name, q)
+            # bitcast to u16 so XLA cannot commute the bf16->f32 convert
+            # ahead of the collective (it otherwise gathers at f32,
+            # doubling the bytes — measured in §Perf C2)
+            bits = jax.lax.bitcast_convert_type(liq, jnp.uint16)
+            gbits = jax.lax.all_gather(bits, axis)               # lowp!
+            gath = jax.lax.bitcast_convert_type(gbits, liq.dtype)
+            lt = gath[j + 1:].reshape(-1, w)
+            upd = ops.qgemm(liq, lt, scale=s1, trans_b=True,
+                            out_dtype=jnp.float32,
+                            impl=cfg.kernel_impl)                # (w, m)
+            if q:
+                scales = jax.lax.all_gather(s1, axis)            # (P,)
+                upd = upd * jnp.repeat(scales[j + 1:], w)[None, :]
+            a_local = a_local.at[:, (j + 1) * w:].add(
+                -upd.astype(a_local.dtype))
+        elif j < nshards - 1:
+            solved = jax.lax.all_gather(li, axis)                # (P, w, w)
+            lt = solved[j + 1:].reshape(-1, w)                   # f32 rows
+            liq, s1 = quant_block(li, name, q)
+            ltq, s2 = quant_block(lt, name, q)
+            a_local = a_local.at[:, (j + 1) * w:].set(
+                ops.qgemm(liq, ltq, scale=-(s1 * s2),
+                          c=a_local[:, (j + 1) * w:], beta=1.0,
+                          trans_b=True, out_dtype=a_local.dtype,
+                          impl=cfg.kernel_impl))
+        a_local = a_local.at[:, j * w:(j + 1) * w].set(li)
+    # zero the (junk-filled) upper triangle of my rows
+    gr = jnp.arange(w)[:, None] + my * w
+    keep = jnp.arange(n)[None, :] <= gr
+    return jnp.where(keep, a_local, 0.0)
+
+
+def dist_cholesky(a, mesh, cfg: PrecisionConfig | None = None,
+                  axis: str = "model", *, broadcast_diag_only: bool = True,
+                  compress_comm: bool = False):
+    """Distributed lower Cholesky of a block-row-sharded SPD matrix.
+
+    ``a``: global (n, n), n divisible by ``mesh.shape[axis] * cfg.leaf``.
+    Returns L with the same sharding. ``compress_comm`` gathers the
+    solved panel in the level-0 low precision (§Perf C2).
+    """
+    cfg = cfg or PrecisionConfig()
+    nshards = mesh.shape[axis]
+    n = a.shape[-1]
+    assert n % nshards == 0 and (n // nshards) % cfg.leaf == 0, (
+        f"n={n} must be divisible by shards*leaf={nshards}*{cfg.leaf}")
+    fn = functools.partial(_local_potrf, axis=axis, nshards=nshards, cfg=cfg,
+                           broadcast_diag_only=broadcast_diag_only,
+                           compress_comm=compress_comm)
+    spec = P(axis, None)
+    return jax.shard_map(fn, mesh=mesh, in_specs=(spec,), out_specs=spec)(a)
+
+
+def _local_solve(l_local, b_local, *, axis: str, nshards: int,
+                 cfg: PrecisionConfig):
+    """Forward then back substitution on block-row-sharded L and B."""
+    w = l_local.shape[0]
+    n = l_local.shape[1]
+    my = jax.lax.axis_index(axis)
+    nrhs = b_local.shape[1]
+
+    # forward: y_j = L_jj^{-1} (b_j - sum_{k<j} L_jk y_k)
+    y = jnp.zeros_like(b_local)
+    for j in range(nshards):
+        acc = b_local
+        if j > 0:
+            yg = jax.lax.all_gather(y, axis)                     # (P, w, r)
+            past = yg[:j].reshape(-1, nrhs)                      # (j*w, r)
+            lpast = l_local[:, :j * w]
+            acc = b_local - ops.qgemm(
+                lpast.astype(cfg.high_dtype), past.astype(cfg.high_dtype),
+                out_dtype=b_local.dtype, impl=cfg.kernel_impl)
+        diag_mine = jnp.where(
+            my == j, l_local[:, j * w:(j + 1) * w],
+            jnp.zeros((w, w), l_local.dtype))
+        diag = jax.lax.psum(diag_mine, axis)
+        yj = tree_trsm_left(acc, diag, cfg, trans=False)
+        y = jnp.where(my == j, yj, y)
+    # backward: x_j = L_jj^{-T} (y_j - sum_{k>j} L_kj^T x_k)
+    x = jnp.zeros_like(y)
+    for j in reversed(range(nshards)):
+        acc = y
+        if j < nshards - 1:
+            xg = jax.lax.all_gather(x, axis)                     # (P, w, r)
+            future = xg[j + 1:].reshape(-1, nrhs)                # ((P-j-1)w, r)
+            # need L[rows>j*w.., cols j]^T  = (column panel j below diag)^T;
+            # column panel j rows are spread across devices k > j: gather
+            # each device's (w, w) block of column panel j.
+            myblk = l_local[:, j * w:(j + 1) * w]                # (w, w)
+            blks = jax.lax.all_gather(myblk, axis)               # (P, w, w)
+            below = blks[j + 1:].reshape(-1, w)                  # ((P-j-1)w, w)
+            acc = y - ops.qgemm(
+                below.T.astype(cfg.high_dtype), future.astype(cfg.high_dtype),
+                out_dtype=y.dtype, impl=cfg.kernel_impl)
+        diag_mine = jnp.where(
+            my == j, l_local[:, j * w:(j + 1) * w],
+            jnp.zeros((w, w), l_local.dtype))
+        diag = jax.lax.psum(diag_mine, axis)
+        xj = tree_trsm_left(acc, diag, cfg, trans=True)
+        x = jnp.where(my == j, xj, x)
+    return x
+
+
+def dist_cholesky_solve(a, b, mesh, cfg: PrecisionConfig | None = None,
+                        axis: str = "model", *, l=None):
+    """Solve A x = b with A (and b) block-row-sharded over ``axis``."""
+    cfg = cfg or PrecisionConfig()
+    if l is None:
+        l = dist_cholesky(a, mesh, cfg, axis)
+    nshards = mesh.shape[axis]
+    vec = b.ndim == 1
+    if vec:
+        b = b[:, None]
+    fn = functools.partial(_local_solve, axis=axis, nshards=nshards, cfg=cfg)
+    x = jax.shard_map(fn, mesh=mesh,
+                      in_specs=(P(axis, None), P(axis, None)),
+                      out_specs=P(axis, None))(l, b)
+    return x[:, 0] if vec else x

@@ -1,0 +1,123 @@
+"""Layered precision configuration (the paper's Fig. 2 ladder).
+
+A :class:`PrecisionConfig` carries the per-recursion-level precision list
+in the paper's notation: ``levels=("f16", "f16", "f32")`` means recursion
+levels 0 and 1 compute their GEMMs in fp16 and every deeper level (and all
+leaf POTRF/TRSM/SYRK tiles) runs at f32. The *last* entry is always the
+highest precision and is used for diagonal leaves — matching the paper's
+``[F16, F16, F32]`` configurations, where precision rises toward the
+diagonal.
+
+TPU note (DESIGN.md §2): ``bf16`` is the MXU-native low precision and the
+recommended default; ``f16`` reproduces the paper's quantization behaviour
+bit-for-bit in spirit (narrow exponent, R_max = 65504). ``f64`` levels are
+supported on CPU for the accuracy study (enable jax_enable_x64).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+DTYPES = {
+    "int8": jnp.int8,        # beyond-paper: v5e MXU int8 = 2x bf16 rate
+    "f16": jnp.float16,
+    "bf16": jnp.bfloat16,
+    "f32": jnp.float32,
+    "f64": jnp.float64,
+}
+
+# Largest finite value of each format (quantization clamps into +-R_max).
+RMAX = {
+    "int8": 127.0,
+    "f16": 65504.0,
+    "bf16": 3.3895314e38,
+    "f32": 3.4028235e38,
+    "f64": 1.7976931e308,
+}
+
+# Formats whose dynamic range is narrow enough that the paper's per-block
+# quantization is load-bearing. bf16/f32 share f32's exponent range, so the
+# scale is 1 for any physically meaningful input; we skip the absmax pass.
+# int8 is *always* scaled (absmax -> [-127, 127]).
+NARROW = frozenset({"f16", "int8"})
+
+#: per-chip TPU v5e peak rates used by the throughput model in benchmarks
+#: (int8 via the MXU's double-rate integer path), not by the solver.
+PEAK_FLOPS = {"int8": 394e12, "f16": 197e12, "bf16": 197e12,
+              "f32": 98.5e12, "f64": 0.49e12}
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionConfig:
+    """Precision ladder + tree geometry for the recursive solver."""
+
+    levels: tuple[str, ...] = ("f32",)
+    leaf: int = 256              # leaf tile size b (multiple of 128)
+    quantize: bool = True        # per-block quant for NARROW dtypes
+    storage_rounding: bool = True  # round updated blocks to their level dtype
+    kernel_impl: str | None = None  # ops.py dispatch override
+
+    def __post_init__(self):
+        assert self.levels, "need at least one precision level"
+        for lv in self.levels:
+            assert lv in DTYPES, lv
+        assert self.leaf % 128 == 0 and self.leaf > 0, self.leaf
+
+    # -- ladder ------------------------------------------------------------
+    def name_at(self, level: int) -> str:
+        return self.levels[min(level, len(self.levels) - 1)]
+
+    def dtype_at(self, level: int):
+        return DTYPES[self.name_at(level)]
+
+    @property
+    def high_name(self) -> str:
+        return self.levels[-1]
+
+    @property
+    def high_dtype(self):
+        return DTYPES[self.high_name]
+
+    def needs_quant(self, level: int) -> bool:
+        name = self.name_at(level)
+        if name == "int8":      # int8 is meaningless without its scale
+            return True
+        return self.quantize and name in NARROW
+
+    # -- geometry ----------------------------------------------------------
+    def split(self, n: int) -> int:
+        """Leaf-aligned bisection point n1 (paper uses n/2; we round to a
+        multiple of the leaf so every tile stays MXU-aligned)."""
+        assert n > self.leaf
+        return self.leaf * max(1, (n // self.leaf) // 2)
+
+    def depth(self, n: int) -> int:
+        """Recursion depth the POTRF tree reaches for size n."""
+        d = 0
+        while n > self.leaf:
+            n -= self.split(n)  # the deeper trailing branch dominates
+            d += 1
+        return d
+
+    def describe(self) -> str:
+        return "[" + ", ".join(s.upper() for s in self.levels) + "]"
+
+
+# Named configurations matching the paper's figures.
+PAPER_CONFIGS = {
+    "pure_f64": PrecisionConfig(levels=("f64",)),
+    "pure_f32": PrecisionConfig(levels=("f32",)),
+    "pure_f16": PrecisionConfig(levels=("f16",)),
+    "f16_f32": PrecisionConfig(levels=("f16", "f32")),
+    "f16x3_f32": PrecisionConfig(levels=("f16",) * 3 + ("f32",)),
+    "f16x5_f32": PrecisionConfig(levels=("f16",) * 5 + ("f32",)),
+    "f32x3_f64": PrecisionConfig(levels=("f32",) * 3 + ("f64",)),
+    # TPU-native variants (bf16 is the MXU input format)
+    "bf16_f32": PrecisionConfig(levels=("bf16", "f32")),
+    "bf16x3_f32": PrecisionConfig(levels=("bf16",) * 3 + ("f32",)),
+    # beyond-paper: int8 top level rides the v5e MXU double-rate integer
+    # path (394 TOPS) — 2.6x model speedup vs uniform f32 at ~3 digits
+    "int8_f32": PrecisionConfig(levels=("int8", "f32")),
+    "int8x3_f32": PrecisionConfig(levels=("int8",) * 3 + ("f32",)),
+}

@@ -1,0 +1,60 @@
+"""Per-block quantization / dequantization (paper §III-D).
+
+Before each low-precision GEMM the operand block is rescaled by
+
+    alpha = max(1, ||B||_inf / R_max)
+
+so every value fits the narrow format's range; the GEMM epilogue multiplies
+the f32 accumulator by the product of operand scales (dequantization).
+For bf16/f32 levels the exponent range matches f32 and the scale is
+statically 1 (no absmax pass is emitted).
+
+The same primitive backs the int8 error-feedback gradient compressor in
+``repro.train.compress`` — one quantizer, two uses (solver + distributed
+training), as advertised in DESIGN.md §2.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.precision import DTYPES, NARROW, RMAX
+
+
+def quant_block(x, level_name: str, enable: bool = True):
+    """Cast ``x`` to the level's dtype with range-safe scaling.
+
+    Returns ``(x_q, alpha)`` such that ``x ~= x_q.astype(f32) * alpha``.
+    ``alpha`` is a traced f32 scalar (1.0 when no rescale was needed).
+
+    int8 (beyond-paper ladder level) always scales: alpha = absmax/127,
+    values rounded into [-127, 127] — the paper's Fig. 3 scheme taken to
+    the MXU's double-rate integer path.
+    """
+    dtype = DTYPES[level_name]
+    if level_name == "int8":
+        amax = jnp.max(jnp.abs(x)).astype(jnp.float32)
+        alpha = jnp.maximum(amax, jnp.float32(1e-30)) / jnp.float32(127.0)
+        q = jnp.clip(jnp.round(x.astype(jnp.float32) / alpha), -127, 127)
+        return q.astype(dtype), alpha
+    if not enable or level_name not in NARROW:
+        return x.astype(dtype), jnp.float32(1.0)
+    amax = jnp.max(jnp.abs(x)).astype(jnp.float32)
+    alpha = jnp.maximum(jnp.float32(1.0), amax / jnp.float32(RMAX[level_name]))
+    return (x / alpha.astype(x.dtype)).astype(dtype), alpha
+
+
+def dequant(x, alpha):
+    return x.astype(jnp.float32) * alpha
+
+
+def quant_int8(x):
+    """Symmetric int8 quantization with per-tensor scale (gradient
+    compression path). Returns (q, scale) with x ~= q * scale."""
+    amax = jnp.max(jnp.abs(x)).astype(jnp.float32)
+    scale = jnp.maximum(amax, jnp.float32(1e-30)) / jnp.float32(127.0)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequant_int8(q, scale, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale).astype(dtype)

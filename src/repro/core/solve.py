@@ -1,0 +1,67 @@
+"""SPD solve / factorization public API built on the tree routines."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import PrecisionConfig
+from repro.core.tree import (pad_spd, tree_potrf, tree_trsm_left)
+
+
+def cholesky(a, cfg: PrecisionConfig | None = None):
+    """Lower Cholesky factor via the nested recursive mixed-precision
+    algorithm. Handles arbitrary n by identity-padding to the leaf size."""
+    cfg = cfg or PrecisionConfig()
+    a_p, n = pad_spd(a, cfg.leaf)
+    l = tree_potrf(a_p, cfg)
+    return l[:n, :n]
+
+
+def cholesky_solve(a, b, cfg: PrecisionConfig | None = None, *, l=None):
+    """Solve A x = b for SPD A via L (L^T x) = b with tree solves.
+
+    ``b`` may be (n,) or (n, k). Pass a precomputed ``l`` to reuse a
+    factorization (the K-FAC optimizer does this across steps).
+    """
+    cfg = cfg or PrecisionConfig()
+    vec = b.ndim == 1
+    if vec:
+        b = b[:, None]
+    n = b.shape[0]
+    if l is None:
+        l = cholesky(a, cfg)
+    npad = -(-n // cfg.leaf) * cfg.leaf
+    if npad != n:
+        lp = jnp.zeros((npad, npad), l.dtype)
+        lp = lp.at[:n, :n].set(l)
+        lp = lp.at[jnp.arange(n, npad), jnp.arange(n, npad)].set(1.0)
+        bp = jnp.zeros((npad, b.shape[1]), b.dtype)
+        bp = bp.at[:n].set(b)
+    else:
+        lp, bp = l, b
+    y = tree_trsm_left(bp, lp, cfg, trans=False)
+    x = tree_trsm_left(y, lp, cfg, trans=True)
+    x = x[:n]
+    return x[:, 0] if vec else x
+
+
+def solve_factored(l, b, cfg: PrecisionConfig | None = None):
+    """Two triangular tree-solves with an existing factor (hot K-FAC path)."""
+    return cholesky_solve(None, b, cfg, l=l)
+
+
+def logdet(l):
+    """log det(A) = 2 sum(log diag(L)) — used by the GP example."""
+    return 2.0 * jnp.sum(jnp.log(jnp.diagonal(l)))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def cholesky_jit(a, cfg: PrecisionConfig):
+    return cholesky(a, cfg)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def cholesky_solve_jit(a, b, cfg: PrecisionConfig):
+    return cholesky_solve(a, b, cfg)

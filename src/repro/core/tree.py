@@ -1,0 +1,188 @@
+"""Nested recursive Cholesky (paper Algs. 1-3) with layered precision.
+
+The three routines are mutually recursive and unroll at *trace time*
+(all shapes static under jit) — the runtime dispatch the paper implements
+with Julia multiple-dispatch becomes a static DAG of mixed-precision
+GEMMs + Pallas leaf kernels that XLA schedules.
+
+Precision rule (uniform, per DESIGN.md §4.2): every tree node at recursion
+``level`` computes its GEMM in ``cfg.levels[min(level, -1)]``; every
+recursive call increments ``level``; leaves use the node's level dtype.
+Narrow dtypes (f16) get the paper's per-block quantization wrapped around
+each GEMM, with the dequantization scale fused into the qgemm epilogue.
+
+``storage_rounding`` reproduces the paper's tree data structure numerics:
+each updated off-diagonal block is rounded to its level's storage dtype
+after the update, exactly as if it lived in the low-precision tree node.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.precision import PrecisionConfig
+from repro.core.quantize import quant_block
+from repro.kernels import ops
+
+
+def _round_to(x, name: str, cfg: PrecisionConfig):
+    """Round ``x`` to the level's storage dtype, keep container dtype.
+
+    This simulates the paper's recursive data structure, where each
+    off-diagonal block is *stored* in its level's precision: numerics are
+    identical to low-precision storage while the container stays dense.
+    For narrow dtypes the block is stored *scaled* (paper Fig. 3: the tree
+    node carries its per-block alpha), so storage never overflows.
+    """
+    if not cfg.storage_rounding:
+        return x
+    from repro.core.precision import DTYPES, NARROW
+    dt = DTYPES[name]
+    if jnp.dtype(dt) == x.dtype:
+        return x
+    if name == "int8" or (name in NARROW and cfg.quantize):
+        xq, alpha = quant_block(x, name, True)
+        return (xq.astype(x.dtype) * alpha.astype(x.dtype))
+    return x.astype(dt).astype(x.dtype)
+
+
+def _sym_from_lower(a):
+    low = jnp.tril(a)
+    return low + jnp.tril(a, -1).T
+
+
+def tree_potrf(a, cfg: PrecisionConfig, *, level: int = 0):
+    """Lower Cholesky factor of SPD ``a`` (paper Alg. 1). Reads the lower
+    triangle only; returns L with zeroed upper triangle. ``a.shape[-1]``
+    must be a multiple of ``cfg.leaf`` (use :func:`pad_spd` otherwise)."""
+    n = a.shape[-1]
+    assert a.shape == (n, n), a.shape
+    if n <= cfg.leaf:
+        name = cfg.name_at(level)
+        leaf = _round_to(_sym_from_lower(a), name, cfg)
+        out = ops.potrf(leaf.astype(cfg.high_dtype), impl=cfg.kernel_impl)
+        return _round_to(out.astype(a.dtype), name, cfg)
+    n1 = cfg.split(n)
+    a11, a21, a22 = a[:n1, :n1], a[n1:, :n1], a[n1:, n1:]
+    l11 = tree_potrf(a11, cfg, level=level + 1)
+    l21 = tree_trsm(a21, l11, cfg, level=level)
+    a22 = tree_syrk(a22, l21, alpha=-1.0, beta=1.0, cfg=cfg, level=level)
+    l22 = tree_potrf(a22, cfg, level=level + 1)
+    n2 = n - n1
+    top = jnp.concatenate([l11, jnp.zeros((n1, n2), a.dtype)], axis=1)
+    bot = jnp.concatenate([l21, l22], axis=1)
+    return jnp.concatenate([top, bot], axis=0)
+
+
+def tree_trsm(b, l, cfg: PrecisionConfig, *, level: int = 0):
+    """X = B L^{-T} (right, lower, transposed — paper Alg. 2).
+
+    ``b``: (m, n) panel, ``l``: (n, n) lower-triangular. Recursion splits
+    the *n* (triangle) dimension; the m dimension streams through the leaf
+    kernel's grid.
+    """
+    m, n = b.shape
+    assert l.shape == (n, n), (b.shape, l.shape)
+    name = cfg.name_at(level)
+    if n <= cfg.leaf:
+        x = ops.trsm(_round_to(b, name, cfg).astype(cfg.high_dtype),
+                     l.astype(cfg.high_dtype),
+                     side="right", trans=True, impl=cfg.kernel_impl)
+        return _round_to(x.astype(b.dtype), name, cfg)
+    n1 = cfg.split(n)
+    l11, l21, l22 = l[:n1, :n1], l[n1:, :n1], l[n1:, n1:]
+    b1 = tree_trsm(b[:, :n1], l11, cfg, level=level + 1)
+    # B2 <- B2 - B1 L21^T  (the exposed GEMM, low precision + quantization)
+    q = cfg.needs_quant(level)
+    b1q, s1 = quant_block(b1, name, q)
+    l21q, s2 = quant_block(l21, name, q)
+    b2 = ops.qgemm(b1q, l21q, scale=-(s1 * s2), c=b[:, n1:], beta=1.0,
+                   trans_b=True, out_dtype=b.dtype, impl=cfg.kernel_impl)
+    b2 = _round_to(b2, name, cfg)
+    b2 = tree_trsm(b2, l22, cfg, level=level + 1)
+    return jnp.concatenate([b1, b2], axis=1)
+
+
+def tree_syrk(c, a, *, alpha=1.0, beta=1.0, cfg: PrecisionConfig,
+              level: int = 0):
+    """C <- beta C + alpha A A^T on the lower triangle (paper Alg. 3 — the
+    first recursive accelerator SYRK). ``c``: (n, n), ``a``: (n, k)."""
+    n = c.shape[-1]
+    k = a.shape[-1]
+    assert c.shape == (n, n) and a.shape == (n, k), (c.shape, a.shape)
+    name = cfg.name_at(level)
+    if n <= cfg.leaf:
+        q = cfg.needs_quant(level)
+        aq, s = quant_block(_round_to(a, name, cfg), name, q)
+        out = ops.syrk(c, aq, scale=alpha * s * s, beta=beta,
+                       impl=cfg.kernel_impl)
+        return _round_to(out, name, cfg)
+    n1 = cfg.split(n)
+    c11 = tree_syrk(c[:n1, :n1], a[:n1], alpha=alpha, beta=beta, cfg=cfg,
+                    level=level + 1)
+    # C21 <- beta C21 + alpha A2 A1^T  (the exposed GEMM)
+    q = cfg.needs_quant(level)
+    a2q, s2 = quant_block(a[n1:], name, q)
+    a1q, s1 = quant_block(a[:n1], name, q)
+    c21 = ops.qgemm(a2q, a1q, scale=alpha * s1 * s2, c=c[n1:, :n1],
+                    beta=beta, trans_b=True, out_dtype=c.dtype,
+                    impl=cfg.kernel_impl)
+    c21 = _round_to(c21, name, cfg)
+    c22 = tree_syrk(c[n1:, n1:], a[n1:], alpha=alpha, beta=beta, cfg=cfg,
+                    level=level + 1)
+    n2 = n - n1
+    top = jnp.concatenate([c11, jnp.zeros((n1, n2), c.dtype)], axis=1)
+    bot = jnp.concatenate([c21, c22], axis=1)
+    return jnp.concatenate([top, bot], axis=0)
+
+
+def tree_trsm_left(b, l, cfg: PrecisionConfig, *, trans: bool,
+                   level: int = 0):
+    """Left-side solves needed by cholesky_solve:
+
+    trans=False : X = L^{-1} B      (forward substitution)
+    trans=True  : X = L^{-T} B      (back substitution)
+    """
+    n, m = b.shape
+    assert l.shape == (n, n), (b.shape, l.shape)
+    name = cfg.name_at(level)
+    if n <= cfg.leaf:
+        x = ops.trsm(_round_to(b, name, cfg).astype(cfg.high_dtype),
+                     l.astype(cfg.high_dtype),
+                     side="left", trans=trans, impl=cfg.kernel_impl)
+        return _round_to(x.astype(b.dtype), name, cfg)
+    n1 = cfg.split(n)
+    l11, l21, l22 = l[:n1, :n1], l[n1:, :n1], l[n1:, n1:]
+    q = cfg.needs_quant(level)
+    if not trans:
+        # y1 = L11^{-1} B1 ; B2 -= L21 y1 ; y2 = L22^{-1} B2
+        y1 = tree_trsm_left(b[:n1], l11, cfg, trans=False, level=level + 1)
+        l21q, s1 = quant_block(l21, name, q)
+        y1q, s2 = quant_block(y1, name, q)
+        b2 = ops.qgemm(l21q, y1q, scale=-(s1 * s2), c=b[n1:], beta=1.0,
+                       out_dtype=b.dtype, impl=cfg.kernel_impl)
+        b2 = _round_to(b2, name, cfg)
+        y2 = tree_trsm_left(b2, l22, cfg, trans=False, level=level + 1)
+        return jnp.concatenate([y1, y2], axis=0)
+    # trans: x2 = L22^{-T} B2 ; B1 -= L21^T x2 ; x1 = L11^{-T} B1
+    x2 = tree_trsm_left(b[n1:], l22, cfg, trans=True, level=level + 1)
+    l21tq, s1 = quant_block(l21.T, name, q)
+    x2q, s2 = quant_block(x2, name, q)
+    b1 = ops.qgemm(l21tq, x2q, scale=-(s1 * s2), c=b[:n1], beta=1.0,
+                   out_dtype=b.dtype, impl=cfg.kernel_impl)
+    b1 = _round_to(b1, name, cfg)
+    x1 = tree_trsm_left(b1, l11, cfg, trans=True, level=level + 1)
+    return jnp.concatenate([x1, x2], axis=0)
+
+
+def pad_spd(a, leaf: int):
+    """Pad an SPD matrix to a multiple of ``leaf`` with an identity tail
+    (keeps SPD-ness exactly; the factor of the tail is the identity)."""
+    n = a.shape[-1]
+    npad = -(-n // leaf) * leaf
+    if npad == n:
+        return a, n
+    pad = npad - n
+    out = jnp.zeros((npad, npad), a.dtype)
+    out = out.at[:n, :n].set(a)
+    out = out.at[jnp.arange(n, npad), jnp.arange(n, npad)].set(1.0)
+    return out, n

@@ -1,0 +1,130 @@
+"""The paper's custom recursive data structure (§III-B) as a JAX pytree.
+
+``TreeSPD`` stores a symmetric matrix the way the paper's Julia solver
+does: the diagonal recursion owns high-precision leaf tiles, every
+off-diagonal panel is stored *in its level's dtype* together with its
+per-block quantization scale. This is the storage (bandwidth) half of
+the paper's claim — the dense-array API in core/solve.py reproduces the
+*numerics* of low-precision storage via `storage_rounding`, while this
+structure realizes the actual memory footprint:
+
+    [F16,F16,F32] at n=65536, leaf 256  =>  0.31x the bytes of dense f32
+    [INT8,INT8,F32]                     =>  0.22x
+
+Registered as a pytree, so a TreeSPD can be jit-carried, sharded, and
+checkpointed like any other state. ``tree_potrf_packed`` factorizes the
+packed form directly, dequantizing panels only at GEMM time.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import DTYPES, PrecisionConfig
+from repro.core.quantize import quant_block
+from repro.core.tree import tree_potrf, tree_trsm, tree_syrk, _round_to
+
+
+@jax.tree_util.register_pytree_node_class
+class TreeSPD:
+    """diag1/diag2: TreeSPD | leaf array (high precision);
+    off: (n2, n1) panel stored in its level's dtype; off_scale: f32."""
+
+    def __init__(self, diag1, off, off_scale, diag2, *, level, n1, n):
+        self.diag1 = diag1
+        self.off = off
+        self.off_scale = off_scale
+        self.diag2 = diag2
+        self.level = level
+        self.n1 = n1
+        self.n = n
+
+    def tree_flatten(self):
+        return ((self.diag1, self.off, self.off_scale, self.diag2),
+                (self.level, self.n1, self.n))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        level, n1, n = aux
+        d1, off, s, d2 = children
+        return cls(d1, off, s, d2, level=level, n1=n1, n=n)
+
+    # -- construction -------------------------------------------------------
+    @classmethod
+    def from_dense(cls, a, cfg: PrecisionConfig, *, level: int = 0):
+        n = a.shape[-1]
+        assert a.shape == (n, n) and n % cfg.leaf == 0, a.shape
+        if n <= cfg.leaf:
+            return a.astype(cfg.high_dtype)     # leaf tile, high precision
+        n1 = cfg.split(n)
+        name = cfg.name_at(level)
+        off_q, scale = quant_block(a[n1:, :n1].astype(jnp.float32), name,
+                                   cfg.needs_quant(level) or name == "int8")
+        return cls(
+            cls.from_dense(a[:n1, :n1], cfg, level=level + 1),
+            off_q, scale,
+            cls.from_dense(a[n1:, n1:], cfg, level=level + 1),
+            level=level, n1=n1, n=n)
+
+    # -- back to dense ------------------------------------------------------
+    def to_dense(self, dtype=jnp.float32):
+        d1 = (self.diag1.to_dense(dtype) if isinstance(self.diag1, TreeSPD)
+              else self.diag1.astype(dtype))
+        d2 = (self.diag2.to_dense(dtype) if isinstance(self.diag2, TreeSPD)
+              else self.diag2.astype(dtype))
+        off = self.off.astype(dtype) * self.off_scale.astype(dtype)
+        n1, n2 = self.n1, self.n - self.n1
+        top = jnp.concatenate([d1, jnp.zeros((n1, n2), dtype)], axis=1)
+        bot = jnp.concatenate([off, d2], axis=1)
+        return jnp.concatenate([top, bot], axis=0)
+
+    # -- storage accounting (the paper's Fig. 2 memory story) ---------------
+    def nbytes(self) -> int:
+        b = self.off.dtype.itemsize * self.off.size + 4
+        for d in (self.diag1, self.diag2):
+            if isinstance(d, TreeSPD):
+                b += d.nbytes()
+            else:
+                b += d.dtype.itemsize * d.size
+        return b
+
+
+def tree_potrf_packed(t, cfg: PrecisionConfig):
+    """Factorize a packed TreeSPD; returns a packed lower factor.
+
+    Identical recursion to Alg. 1, but the off-diagonal panel is read
+    from (and written back to) its low-precision storage — panels only
+    exist densified inside their own TRSM/SYRK calls.
+    """
+    if not isinstance(t, TreeSPD):
+        return tree_potrf(t, cfg, level=0)      # leaf tile
+
+    level = t.level
+    name = cfg.name_at(level)
+    l11 = tree_potrf_packed(t.diag1, cfg)
+    l11_d = l11.to_dense() if isinstance(l11, TreeSPD) else \
+        l11.astype(jnp.float32)
+    a21 = t.off.astype(jnp.float32) * t.off_scale.astype(jnp.float32)
+    l21 = tree_trsm(a21, l11_d, cfg, level=level)
+    a22 = (t.diag2.to_dense() if isinstance(t.diag2, TreeSPD)
+           else t.diag2.astype(jnp.float32))
+    a22 = tree_syrk(a22, l21, alpha=-1.0, beta=1.0, cfg=cfg, level=level)
+    l22 = tree_potrf_packed(TreeSPD.from_dense(a22, cfg, level=level + 1)
+                            if a22.shape[-1] > cfg.leaf else a22, cfg)
+    l21_q, s = quant_block(l21, name,
+                           cfg.needs_quant(level) or name == "int8")
+    return TreeSPD(l11, l21_q, s, l22, level=level, n1=t.n1, n=t.n)
+
+
+def storage_ratio(n: int, cfg: PrecisionConfig) -> float:
+    """bytes(TreeSPD under cfg) / bytes(dense f32 lower triangle x2) —
+    shape-only, no allocation."""
+    def rec(n, level):
+        if n <= cfg.leaf:
+            return n * n * jnp.dtype(cfg.high_dtype).itemsize
+        n1 = cfg.split(n)
+        n2 = n - n1
+        off = n2 * n1 * jnp.dtype(DTYPES[cfg.name_at(level)]).itemsize
+        return off + rec(n1, level + 1) + rec(n2, level + 1)
+
+    return rec(n, 0) / (n * n * 4)

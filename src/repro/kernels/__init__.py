@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the hot compute paths + pure-jnp oracles.
+
+Modules:
+  qgemm.py  — quantized mixed-precision GEMM (fused dequant epilogue)
+  potrf.py  — leaf Cholesky + leaf triangular inverse (in-VMEM blocked)
+  trsm.py   — leaf triangular solve (inverse-then-GEMM, MXU friendly)
+  syrk.py   — leaf SYRK + beyond-paper triangular-packed fused SYRK
+  flash.py  — causal GQA flash-attention (online softmax in VMEM)
+  ops.py    — public dispatching API (pallas / interpret / jnp)
+  ref.py    — pure-jnp oracles (ground truth for tests, CPU exec path)
+"""
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,87 @@
+"""Public jit'd kernel API with backend dispatch.
+
+This is the TPU analogue of the paper's Julia multiple-dispatch layer: a
+single call site (`ops.qgemm`, `ops.potrf`, ...) resolves to
+
+  * the Pallas TPU kernel when running on TPU (`impl="pallas"`),
+  * the Pallas kernel in interpret mode for correctness work
+    (`impl="interpret"`),
+  * the pure-jnp oracle (XLA fused) on CPU/GPU (`impl="jnp"`).
+
+Default is "auto": pallas on TPU, jnp elsewhere. Override globally with
+REPRO_KERNEL_IMPL={pallas,interpret,jnp} or per-call with ``impl=``.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import qgemm as _qgemm
+from repro.kernels import potrf as _potrf
+from repro.kernels import syrk as _syrk
+from repro.kernels import trsm as _trsm
+from repro.kernels import ref as _ref
+
+_VALID = ("auto", "pallas", "interpret", "jnp")
+
+
+def resolve_impl(impl: str | None = None) -> str:
+    impl = impl or os.environ.get("REPRO_KERNEL_IMPL", "auto")
+    assert impl in _VALID, impl
+    if impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    return impl
+
+
+def qgemm(a, b, scale=1.0, *, c=None, beta=0.0, trans_b=False,
+          out_dtype=jnp.float32, impl=None, **tiles):
+    impl = resolve_impl(impl)
+    if impl == "jnp":
+        return _ref.qgemm_ref(a, b, trans_b=trans_b, scale=scale, c=c,
+                              beta=beta, out_dtype=out_dtype)
+    return _qgemm.qgemm(a, b, scale, c=c, beta=beta, trans_b=trans_b,
+                        out_dtype=out_dtype,
+                        interpret=(impl == "interpret"), **tiles)
+
+
+def potrf(a, *, impl=None):
+    impl = resolve_impl(impl)
+    if impl == "jnp":
+        return _ref.potrf_ref(a)
+    return _potrf.potrf_leaf(a, interpret=(impl == "interpret"))
+
+
+def tri_inv(l, *, impl=None):
+    impl = resolve_impl(impl)
+    if impl == "jnp":
+        return _ref.tri_inv_ref(l)
+    return _potrf.tri_inv_leaf(l, interpret=(impl == "interpret"))
+
+
+def trsm(b, l, *, side="right", trans=True, impl=None):
+    impl = resolve_impl(impl)
+    if impl == "jnp":
+        return _ref.trsm_ref(b, l, side=side, trans=trans)
+    if side == "right" and trans:
+        return _trsm.trsm_leaf(b, l, interpret=(impl == "interpret"))
+    # Left-side leaf solves reduce to the right-side kernel by transposition:
+    #   L^{-1} B   = (B^T L^{-T})^T
+    #   L^{-T} B   = (B^T L^{-1})^T = ((L^{-1} B^T... ) use inv directly
+    linv = tri_inv(l, impl=impl)
+    if side == "left" and not trans:
+        return qgemm(linv.astype(b.dtype), b, impl=impl,
+                     out_dtype=b.dtype)
+    if side == "left" and trans:
+        return qgemm(linv.T.astype(b.dtype), b, impl=impl,
+                     out_dtype=b.dtype)
+    raise NotImplementedError(f"trsm side={side} trans={trans}")
+
+
+def syrk(c, a, scale=1.0, beta=1.0, *, packed=False, impl=None, **tiles):
+    impl = resolve_impl(impl)
+    if impl == "jnp":
+        return _ref.syrk_ref(c, a, alpha=1.0, beta=beta, scale=scale)
+    fn = _syrk.syrk_packed if packed else _syrk.syrk_leaf
+    return fn(c, a, scale, beta, interpret=(impl == "interpret"), **tiles)

@@ -1,0 +1,100 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the Pallas kernels are validated against
+(tests/test_kernels.py sweeps shapes & dtypes with assert_allclose).
+They are also the CPU execution path selected by ops.py when no TPU is
+present, so the whole framework runs end-to-end on a laptop.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _acc_dtype(*xs):
+    """f32 accumulation (MXU semantics) unless an operand is f64 — the
+    f64 ladder levels exist only on CPU and must not truncate."""
+    if any(jnp.dtype(x.dtype) == jnp.float64 for x in xs):
+        return jnp.float64
+    return jnp.float32
+
+
+def qgemm_ref(a, b, *, trans_b=False, scale=1.0, c=None, beta=0.0,
+              out_dtype=jnp.float32):
+    """Mixed-precision GEMM oracle: out = scale * (a @ b[T]) + beta * c.
+
+    ``a``/``b`` arrive already quantized/cast to the low compute dtype;
+    the contraction accumulates in f32 (MXU semantics; f64 on the CPU
+    f64 ladder), the epilogue applies the dequantization scale and the
+    optional accumulator.
+    """
+    bt = b.T if trans_b else b
+    if jnp.issubdtype(a.dtype, jnp.integer):
+        # int8 ladder level: exact integer contraction, f32 epilogue
+        acc = jnp.dot(a, bt, preferred_element_type=jnp.int32)
+        ad = jnp.float32
+    else:
+        ad = _acc_dtype(a, b, *((c,) if c is not None else ()))
+        acc = jnp.dot(a, bt, preferred_element_type=ad)
+    out = acc.astype(ad) * jnp.asarray(scale, ad)
+    if c is not None:
+        out = out + jnp.asarray(beta, ad) * c.astype(ad)
+    return out.astype(out_dtype)
+
+
+def _compute_dtype(dt):
+    """LAPACK/XLA factorizations need >= f32; narrow dtypes compute in f32
+    and round back (exactly what real hardware leaf kernels do)."""
+    return jnp.float32 if jnp.dtype(dt).itemsize < 4 else dt
+
+
+def potrf_ref(a):
+    """Lower Cholesky factor (upper triangle zeroed)."""
+    cd = _compute_dtype(a.dtype)
+    return jnp.linalg.cholesky(a.astype(cd)).astype(a.dtype)
+
+
+def tri_inv_ref(l):
+    """Inverse of a lower-triangular matrix."""
+    cd = _compute_dtype(l.dtype)
+    eye = jnp.eye(l.shape[-1], dtype=cd)
+    out = jax.scipy.linalg.solve_triangular(l.astype(cd), eye, lower=True)
+    return out.astype(l.dtype)
+
+
+def trsm_ref(b, l, *, side="right", trans=True):
+    """Triangular solve oracle.
+
+    side=right, trans=True  : X = B L^{-T}   (the paper's Alg. 2 form)
+    side=left,  trans=False : X = L^{-1} B
+    side=left,  trans=True  : X = L^{-T} B
+    """
+    cd = _compute_dtype(b.dtype)
+    bc, lc = b.astype(cd), l.astype(cd)
+    if side == "right" and trans:
+        y = jax.scipy.linalg.solve_triangular(lc, bc.T, lower=True, trans=0)
+        return y.T.astype(b.dtype)
+    if side == "left" and not trans:
+        return jax.scipy.linalg.solve_triangular(
+            lc, bc, lower=True, trans=0).astype(b.dtype)
+    if side == "left" and trans:
+        return jax.scipy.linalg.solve_triangular(
+            lc, bc, lower=True, trans=1).astype(b.dtype)
+    raise NotImplementedError(f"trsm side={side} trans={trans}")
+
+
+def syrk_ref(c, a, *, alpha=1.0, beta=1.0, scale=1.0):
+    """SYRK oracle: lower(C) <- beta*C + alpha*scale*(A A^T); upper kept.
+
+    ``scale`` carries the dequantization factor when A is quantized.
+    """
+    if jnp.issubdtype(a.dtype, jnp.integer):
+        a = a.astype(jnp.bfloat16)      # exact for int8 (|v| <= 127)
+    ad = _acc_dtype(c, a)
+    acc = jnp.dot(a, a.T, preferred_element_type=ad)
+    upd = (jnp.asarray(beta, ad) * c.astype(ad)
+           + jnp.asarray(alpha, ad) * jnp.asarray(scale, ad) * acc)
+    n = c.shape[-1]
+    row = jax.lax.broadcasted_iota(jnp.int32, (n, n), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)
+    return jnp.where(row >= col, upd, c.astype(ad)).astype(c.dtype)

@@ -1,0 +1,216 @@
+"""Multi-pod dry-run (assignment §MULTI-POD DRY-RUN).
+
+For every (architecture x input-shape x mesh) cell:
+  * build the production mesh ((16,16) or (2,16,16) placeholder devices),
+  * abstract-init params / optimizer state / caches (ShapeDtypeStruct),
+  * jit the right step (train_step / prefill_step / serve_step) with
+    explicit in/out shardings,
+  * .lower().compile() — success proves the distribution config is
+    coherent; failures are bugs,
+  * record memory_analysis(), cost_analysis(), and per-collective bytes
+    parsed from the optimized HLO into experiments/dryrun/<cell>.json
+    (consumed by benchmarks/roofline.py and EXPERIMENTS.md).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-2b \
+      --shape train_4k [--multi-pod] [--kfac] [--out experiments/dryrun]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+from __future__ import annotations
+
+# The VERY FIRST action before any jax-touching import: the dry-run (and
+# only the dry-run) needs 512 placeholder devices (assignment step 0).
+import os  # noqa: E402
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import functools
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.launch import sharding as SH
+from repro.launch import specs as SP
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as T
+from repro.optim import AdamWConfig, TreeNewtonConfig
+from repro.serve import engine
+from repro.train import TrainConfig, make_train_step
+
+# ---------------------------------------------------------------------------
+# cell construction  (the collective/FLOP census lives in hloparse.py —
+# it attributes ops to computations and scales by while-loop trip counts)
+# ---------------------------------------------------------------------------
+def build_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               kfac: bool = False, accum: int | None = None,
+               layout: str = "tp"):
+    """Returns (lower_fn,) — a thunk that lowers+compiles and returns the
+    (lowered, compiled) pair."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = configs.get_config(arch)
+    shape = configs.SHAPES[shape_name]
+    sharder = SH.make_sharder(mesh, multi_pod=multi_pod,
+                              batch=shape.global_batch, layout=layout)
+
+    rng = jax.random.PRNGKey(0)
+    p_shapes = jax.eval_shape(lambda k: T.init_params(k, cfg), rng)
+    p_shard = SH.param_shardings(p_shapes, cfg, mesh, layout)
+
+    if shape.kind == "train":
+        accum = accum or SP.pick_accum(cfg, shape, mesh, sharder.batch_axes)
+        big = sum(x.size for x in jax.tree.leaves(p_shapes)) > 1e11
+        adam = AdamWConfig(state_dtype="bf16" if big else "f32")
+        if kfac:
+            tn = TreeNewtonConfig(adam=adam, block=512, factor_every=10)
+            tcfg = TrainConfig(optimizer="tree_newton", tree_newton=tn,
+                               accum=accum)
+        else:
+            tcfg = TrainConfig(optimizer="adamw", adam=adam, accum=accum)
+
+        from repro.train import init_state
+        s_shapes = jax.eval_shape(
+            lambda k: init_state(k, cfg, tcfg), rng)
+        o_shard = SH.opt_state_shardings(s_shapes["opt"], p_shard, mesh)
+        state_shard = {"params": p_shard, "opt": o_shard,
+                       "step": NamedSharding(mesh, P())}
+        b_struct = SP.train_batch_struct(cfg, shape, accum)
+        b_shard = SH.batch_shardings(b_struct, sharder, mesh, accum)
+        step = make_train_step(cfg, tcfg, sharder)
+        jf = jax.jit(step, in_shardings=(state_shard, b_shard),
+                     out_shardings=(state_shard, None),
+                     donate_argnums=(0,))
+        lower = lambda: jf.lower(s_shapes, b_struct)
+        meta = {"accum": accum, "optimizer": tcfg.optimizer,
+                "opt_state_dtype": adam.state_dtype}
+    elif shape.kind == "prefill":
+        b_struct = SP.prefill_batch_struct(cfg, shape)
+        b_shard = SH.batch_shardings(b_struct, sharder, mesh)
+        c_struct = SP.cache_struct(cfg, shape.global_batch, shape.seq_len)
+        c_shard = SH.cache_shardings(c_struct, cfg, sharder, mesh)
+        fn = functools.partial(engine.prefill_step, cfg=cfg,
+                               sharder=sharder)
+        jf = jax.jit(fn, in_shardings=(p_shard, b_shard),
+                     out_shardings=(NamedSharding(mesh, P()), c_shard))
+        lower = lambda: jf.lower(p_shapes, b_struct)
+        meta = {}
+    else:  # decode
+        c_struct, tok_struct, pos_struct = SP.decode_inputs_struct(cfg,
+                                                                   shape)
+        c_shard = SH.cache_shardings(c_struct, cfg, sharder, mesh)
+        tok_shard = SH.batch_shardings({"t": tok_struct}, sharder,
+                                       mesh)["t"]
+        fn = functools.partial(engine.serve_step, cfg=cfg, sharder=sharder)
+        jf = jax.jit(fn, in_shardings=(p_shard, c_shard, tok_shard,
+                                       NamedSharding(mesh, P())),
+                     out_shardings=(NamedSharding(mesh, P()), c_shard),
+                     donate_argnums=(1,))
+        lower = lambda: jf.lower(p_shapes, c_struct, tok_struct, pos_struct)
+        meta = {}
+
+    n_params = sum(x.size for x in jax.tree.leaves(p_shapes))
+    meta.update({"arch": arch, "shape": shape_name, "layout": layout,
+                 "multi_pod": multi_pod, "kfac": kfac,
+                 "n_devices": mesh.size, "n_params": int(n_params),
+                 "batch_axes": list(sharder.batch_axes)})
+    return lower, meta, mesh
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             kfac: bool = False, out_dir: str = "experiments/dryrun",
+             hlo_dir: str | None = None, layout: str = "tp"):
+    t0 = time.time()
+    lower, meta, mesh = build_cell(arch, shape_name, multi_pod=multi_pod,
+                                   kfac=kfac, layout=layout)
+    with mesh:
+        lowered = lower()
+        compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+    rec = dict(meta)
+    rec["wall_s"] = round(time.time() - t0, 1)
+    rec["memory"] = {
+        "argument_bytes": mem.argument_size_in_bytes,
+        "output_bytes": mem.output_size_in_bytes,
+        "temp_bytes": mem.temp_size_in_bytes,
+        "alias_bytes": mem.alias_size_in_bytes,
+        "code_bytes": mem.generated_code_size_in_bytes,
+    }
+    rec["per_device_bytes"] = (
+        mem.argument_size_in_bytes + mem.output_size_in_bytes
+        + mem.temp_size_in_bytes - mem.alias_size_in_bytes)
+    rec["cost"] = {k: v for k, v in cost.items()
+                   if k in ("flops", "transcendentals", "bytes accessed")}
+    from repro.launch import hloparse
+    cen = hloparse.census(hlo)
+    rec["census"] = {"flops": cen["flops"], "hbm_bytes": cen["hbm_bytes"],
+                     "loops": cen["loops"]}
+    rec["collectives"] = cen["collectives"]
+    rec["hlo_lines"] = hlo.count("\n")
+    os.makedirs(out_dir, exist_ok=True)
+    tag = "kfac-" if kfac else ""
+    if layout != "tp":
+        tag += f"{layout}-"
+    name = (f"{tag}{arch}__{shape_name}__"
+            f"{'pod2' if multi_pod else 'pod1'}")
+    with open(os.path.join(out_dir, name + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    if hlo_dir:
+        os.makedirs(hlo_dir, exist_ok=True)
+        with open(os.path.join(hlo_dir, name + ".hlo.txt"), "w") as f:
+            f.write(hlo)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=configs.ARCHS)
+    ap.add_argument("--shape", choices=tuple(configs.SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--kfac", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--hlo-dir", default=None)
+    ap.add_argument("--continue-on-error", action="store_true")
+    ap.add_argument("--layout", default="tp", choices=("tp", "ddp"))
+    args = ap.parse_args()
+
+    cells = ([(args.arch, args.shape, True)] if not args.all
+             else configs.cells())
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    ok = fail = skip = 0
+    for arch, shp, runnable in cells:
+        if not runnable:
+            print(f"SKIP  {arch:22s} {shp:12s} (assignment rule)")
+            skip += 1
+            continue
+        for mp in meshes:
+            tag = "pod2" if mp else "pod1"
+            try:
+                rec = run_cell(arch, shp, multi_pod=mp, kfac=args.kfac,
+                               out_dir=args.out, hlo_dir=args.hlo_dir,
+                               layout=args.layout)
+                gb = rec["per_device_bytes"] / 2**30
+                print(f"OK    {arch:22s} {shp:12s} {tag}  "
+                      f"{gb:7.2f} GiB/dev  flops={rec['cost'].get('flops', 0):.3e}  "
+                      f"wall={rec['wall_s']}s")
+                ok += 1
+            except Exception as e:  # noqa: BLE001
+                print(f"FAIL  {arch:22s} {shp:12s} {tag}  "
+                      f"{type(e).__name__}: {e}")
+                fail += 1
+                if not args.continue_on_error:
+                    traceback.print_exc()
+                    raise
+    print(f"\ndry-run summary: {ok} ok, {fail} failed, {skip} skipped")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,262 @@
+"""Optimized-HLO census: exact FLOPs / HBM bytes / collective bytes with
+while-loop trip-count scaling.
+
+XLA's HloCostAnalysis counts a while-loop body ONCE regardless of trip
+count (verified in tests/test_roofline.py), which silently drops ~L x the
+FLOPs of a scanned-layer model. This parser recovers the real totals from
+``compiled.as_text()``:
+
+  1. split the module into computations,
+  2. find every ``while`` instruction, read its trip count from the
+     condition computation's ``constant(N)`` + ``compare(..., LT)``,
+  3. propagate execution multipliers (nested loops multiply),
+  4. per instruction, accumulate
+       * dot FLOPs (2 * prod(batch+m+n) * prod(contracting)),
+       * I/O bytes of top-level fusions/dots/custom-calls (HBM-traffic
+         proxy: each fusion reads operands and writes outputs once),
+       * collective output bytes per op kind.
+
+All numbers are per device (the module is already SPMD-partitioned).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+                "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(
+    r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(")
+# lazy type match: tuple types may contain /*index=N*/ comments, braces,
+# and '='; the op is the first bare `word(` after the '='.
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s*\b([\w\-]+)\(")
+_CALLED = re.compile(
+    r"(?:condition|body|to_apply|calls|called_computations)="
+    r"\{?%?([\w.\-]+)")
+_TRIP = re.compile(r"constant\((\d+)\)")
+_KNOWN_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_elems_bytes(type_str: str):
+    elems = bytes_ = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        bytes_ += n * _DTYPE_BYTES[dt]
+    return elems, bytes_
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    op: str
+    out_type: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list
+
+    def find(self, name):
+        for i in self.instrs:
+            if i.name == name:
+                return i
+        return None
+
+
+def parse_computations(hlo: str) -> dict:
+    comps = {}
+    cur = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if not line or line.lstrip().startswith("//"):
+            continue
+        if (not line.startswith(" ") and "->" in line
+                and line.endswith("{")):
+            m = _COMP_HDR.match(line.strip())
+            if m:
+                cur = Computation(m.group(1), [])
+                comps[cur.name] = cur
+                continue
+        if cur is None:
+            continue
+        m = _INSTR.match(line)
+        if m:
+            cur.instrs.append(Instr(m.group(1), m.group(3).strip(),
+                                    m.group(2).strip(), line.strip()))
+    return comps
+
+
+def _entry_name(hlo: str, comps: dict) -> str:
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)", hlo, re.M)
+    if m and m.group(1) in comps:
+        return m.group(1)
+    # fallback: computation not referenced by anyone
+    called = set()
+    for c in comps.values():
+        for i in c.instrs:
+            for cc in _CALLED.findall(i.line):
+                called.add(cc)
+    for name in comps:
+        if name not in called:
+            return name
+    return next(iter(comps))
+
+
+def _trip_count_from_while(instr: Instr, comps: dict) -> int:
+    """Prefer XLA's own annotation; fall back to the condition parse."""
+    m = _KNOWN_TRIP.search(instr.line)
+    if m:
+        return int(m.group(1))
+    mc = re.search(r"condition=%?([\w.\-]+)", instr.line)
+    if mc and mc.group(1) in comps:
+        return _trip_count(comps[mc.group(1)])
+    return 1
+
+
+def _trip_count(cond: Computation) -> int:
+    """Scan-style condition: compare(iter, constant(N)), direction=LT."""
+    consts = {}
+    for i in cond.instrs:
+        m = _TRIP.search(i.line)
+        if m:
+            consts[i.name] = int(m.group(1))
+    for i in cond.instrs:
+        if i.op == "compare" and "direction=LT" in i.line:
+            for cname, val in consts.items():
+                if cname in i.line:
+                    return val
+    # single constant in a tiny condition — take it
+    if len(consts) == 1:
+        return next(iter(consts.values()))
+    return 1
+
+
+def _multipliers(comps: dict, entry: str) -> dict:
+    """Execution multiplier per computation (nested whiles multiply)."""
+    mult = {name: 0 for name in comps}
+    mult[entry] = 1
+
+    def visit(name, m):
+        if mult.get(name, 0) >= m and name != entry:
+            pass
+        mult[name] = max(mult.get(name, 0), m)
+        comp = comps[name]
+        for i in comp.instrs:
+            called = _CALLED.findall(i.line)
+            if i.op == "while":
+                mb = re.search(r"body=%?([\w.\-]+)", i.line)
+                mc = re.search(r"condition=%?([\w.\-]+)", i.line)
+                body = mb.group(1) if mb else None
+                cond = mc.group(1) if mc else None
+                trips = _trip_count_from_while(i, comps)
+                if body in comps:
+                    visit(body, m * max(trips, 1))
+                if cond in comps:
+                    visit(cond, m * max(trips, 1))
+            else:
+                for cc in called:
+                    if cc in comps:
+                        visit(cc, m)
+
+    visit(entry, 1)
+    return mult
+
+
+_DOT_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERAND_TYPES = re.compile(
+    r"\(((?:%?[\w.\-]+(?:,\s*)?)+)\)")
+
+
+def _dot_flops(instr: Instr, comp: Computation) -> float:
+    """2 * prod(output dims) * prod(contracting dims of lhs)."""
+    out_elems, _ = _shape_elems_bytes(instr.out_type)
+    mc = _DOT_CONTRACT.search(instr.line)
+    # find lhs operand's type by name lookup in the same computation
+    args = re.search(r"\b" + re.escape(instr.op) + r"\(([^)]*)\)",
+                     instr.line)
+    contract = 1
+    if mc and args:
+        lhs_name = args.group(1).split(",")[0].strip().lstrip("%")
+        lhs = comp.find(lhs_name)
+        if lhs is not None:
+            m2 = _SHAPE_RE.search(lhs.out_type)
+            if m2:
+                dims = [int(d) for d in m2.group(2).split(",") if d]
+                for ci in mc.group(1).split(","):
+                    if ci:
+                        contract *= dims[int(ci)]
+    return 2.0 * out_elems * contract
+
+
+# ops whose I/O we count as HBM traffic. Pure layout/expansion ops
+# (reshape/broadcast/convert/iota/...) are excluded: on TPU they fuse
+# into consumers; the CPU HLO we parse leaves them unfused, which would
+# inflate the proxy several-fold. The result is still an upper bound on
+# TPU HBM traffic (documented in EXPERIMENTS.md §Roofline).
+_MEM_OPS = {"fusion", "dot", "custom-call", "convolution", "copy",
+            "dynamic-slice", "dynamic-update-slice", "gather", "scatter",
+            "sort",
+            "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+            "collective-permute"}
+
+
+def _operand_bytes(instr: Instr, comp: Computation) -> float:
+    args = re.search(r"\b" + re.escape(instr.op) + r"\(([^)]*)\)",
+                     instr.line)
+    total = 0.0
+    if not args:
+        return 0.0
+    for a in args.group(1).split(","):
+        a = a.strip().lstrip("%")
+        src = comp.find(a)
+        if src is not None:
+            _, b = _shape_elems_bytes(src.out_type)
+            total += b
+    return total
+
+
+def census(hlo: str) -> dict:
+    comps = parse_computations(hlo)
+    entry = _entry_name(hlo, comps)
+    mult = _multipliers(comps, entry)
+
+    flops = 0.0
+    hbm_bytes = 0.0
+    coll = {k: {"count": 0.0, "bytes": 0.0} for k in COLLECTIVES}
+    loops = []
+    for name, comp in comps.items():
+        m = mult.get(name, 0)
+        if m == 0:
+            continue
+        for i in comp.instrs:
+            if i.op == "dot":
+                flops += m * _dot_flops(i, comp)
+            if i.op in COLLECTIVES or i.op.startswith(
+                    tuple(c + "-start" for c in COLLECTIVES)):
+                base = i.op.replace("-start", "")
+                if base in coll:
+                    _, b = _shape_elems_bytes(i.out_type)
+                    coll[base]["count"] += m
+                    coll[base]["bytes"] += m * b
+            if i.op in _MEM_OPS and not i.op.endswith("-done"):
+                _, ob = _shape_elems_bytes(i.out_type)
+                hbm_bytes += m * (ob + _operand_bytes(i, comp))
+            if i.op == "while":
+                loops.append((i.name, _trip_count_from_while(i, comps)))
+    return {"flops": flops, "hbm_bytes": hbm_bytes,
+            "collectives": coll, "loops": sorted(set(loops)),
+            "n_computations": len(comps)}

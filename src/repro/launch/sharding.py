@@ -1,0 +1,225 @@
+"""Sharding rules: parameters, optimizer state, batches, caches.
+
+DP(+FSDP) over 'data' (+ 'pod'), TP over 'model', EP over 'model' for
+MoE experts, SP via seq-sharded residuals (Sharder). Rules are by leaf
+path + shape with divisibility guards; anything unmatched is replicated
+(correct, just not memory-optimal — the dry-run memory analysis catches
+regressions).
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.common import ModelConfig, Sharder
+
+
+def _path_str(path):
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def _axis_size(mesh, axis) -> int:
+    if isinstance(axis, tuple):
+        s = 1
+        for a in axis:
+            s *= mesh.shape[a]
+        return s
+    return mesh.shape[axis]
+
+
+def _div(n, mesh, axis):
+    return axis is not None and n % _axis_size(mesh, axis) == 0
+
+
+def make_sharder(mesh, *, multi_pod: bool, batch: int,
+                 layout: str = "tp") -> Sharder:
+    """layout='tp' : data-parallel over (pod,)data, TP/EP over model.
+    layout='ddp': both axes are data parallelism + ZeRO-3 (the §Perf B3
+    winner for small recurrent archs whose time-scan forbids sequence
+    sharding — TP buys nothing there)."""
+    batch_axes = pick_batch_axes(batch, mesh, multi_pod, layout)
+    if layout == "ddp":
+        return Sharder(enabled=True, batch_axes=batch_axes,
+                       model_axis=None, fsdp_axis="fsdp-all", mesh=mesh)
+    return Sharder(enabled=True, batch_axes=batch_axes, model_axis="model",
+                   fsdp_axis="data", mesh=mesh)
+
+
+def pick_batch_axes(batch: int, mesh, multi_pod: bool,
+                    layout: str = "tp"):
+    """Greedily assign mesh axes to the batch dim while they divide it
+    (long_500k's batch=1 ends up fully replicated)."""
+    if layout == "ddp":
+        cands = (("pod", "data", "model") if multi_pod
+                 else ("data", "model"))
+    else:
+        cands = ("pod", "data") if multi_pod else ("data",)
+    axes = []
+    rem = batch
+    for a in cands:
+        s = mesh.shape[a]
+        if rem % s == 0 and rem >= s:
+            axes.append(a)
+            rem //= s
+    return tuple(axes)
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+_RULES = [
+    # (regex on path, matcher(shape) -> PartitionSpec or None)
+    (r"moe/(w_in|w_gate|w_out)$", "moe_expert"),
+    (r"(embed)$", "embed"),
+    (r"(lm_head)$", "lm_head"),
+    (r"(w_in|w_gate|wq|wk|wv|wr|wk|wv|wg|ck|w_uq|w_uk|w_uv)$", "d_to_f"),
+    (r"(w_out|wo|cv)$", "f_to_d"),
+    (r"(router|w_dkv|w_kr|w_dq|w_lora_a|patch_proj|cr)$", "d_only"),
+    (r"(shared/w_in|shared/w_gate)$", "d_to_f"),
+    (r"(shared/w_out)$", "f_to_d"),
+]
+
+
+def param_spec(path, leaf, cfg: ModelConfig, mesh, layout: str = "tp") -> P:
+    """PartitionSpec for one parameter leaf (shape may have a leading
+    stacked-layers dim)."""
+    ps = _path_str(path)
+    shape = leaf.shape
+    if layout == "ddp":
+        # pure ZeRO-3: shard one big dim over ALL mesh axes, no TP
+        dall = tuple(mesh.axis_names)
+        if leaf.ndim >= 2:
+            for dim in (leaf.ndim - 2, leaf.ndim - 1):
+                if _div(shape[dim], mesh, dall):
+                    spec = [None] * leaf.ndim
+                    spec[dim] = dall
+                    return P(*spec)
+        return P()
+    # FSDP spans the pod axis too on the multi-pod mesh (ZeRO-3 over all
+    # 512 chips — the 671B configs need it; DESIGN.md §4.6)
+    d = ("pod", "data") if "pod" in mesh.axis_names else "data"
+    m = "model"
+
+    def guard(spec):
+        out = []
+        for ax, size in zip(spec, shape):
+            ok = ax is not None and _div(size, mesh, ax)
+            out.append(ax if ok else None)
+        return P(*out)
+
+    kind = None
+    for rx, k in _RULES:
+        if re.search(rx, ps):
+            kind = k
+            break
+    if kind is None or leaf.ndim < 2:
+        return P()  # norms, biases, scalars: replicated
+
+    lead = (None,) * (leaf.ndim - 2)
+    if kind == "moe_expert":
+        # [L, E, din, dout]: EP over model, FSDP over data on din
+        lead = (None,) * (leaf.ndim - 3)
+        return guard(lead + (m, d, None))
+    if kind == "embed":
+        if "audio" == cfg.family and leaf.ndim == 3:     # [ncb, V, D]
+            return guard((None, m, d))
+        return guard((m, d))                              # [V, D]
+    if kind == "lm_head":
+        if cfg.family == "audio" and leaf.ndim == 3:      # [ncb, D, V]
+            return guard((None, d, m))
+        return guard((d, m))                              # [D, V]
+    if kind == "d_to_f":
+        return guard(lead + (d, m))
+    if kind == "f_to_d":
+        return guard(lead + (m, d))
+    if kind == "d_only":
+        return guard(lead + (d, None))
+    raise AssertionError(kind)
+
+
+def param_shardings(shapes, cfg: ModelConfig, mesh, layout: str = "tp"):
+    """Pytree of NamedSharding matching a pytree of ShapeDtypeStruct."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: NamedSharding(mesh, param_spec(p, l, cfg, mesh,
+                                                    layout)),
+        shapes)
+
+
+def opt_state_shardings(opt_shapes, params_shardings, mesh):
+    """Optimizer state: moments mirror their parameter's sharding; the
+    TreeNewton stats/factors [L, nb, b, b] shard L over data; scalars
+    replicated."""
+    pflat = {_path_str(p): s for p, s in
+             jax.tree_util.tree_flatten_with_path(params_shardings)[0]}
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        # adam moments: ".../m/<param path>" or ".../v/<param path>"
+        mM = re.match(r"^(?:adam/)?(?:m|v)/(.*)$", ps)
+        if mM and mM.group(1) in pflat:
+            return pflat[mM.group(1)]
+        if re.search(r"(stats|factors)/", ps) and leaf.ndim >= 3:
+            if leaf.shape[0] % mesh.shape["data"] == 0:
+                return NamedSharding(
+                    mesh, P("data", *(None,) * (leaf.ndim - 1)))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(one, opt_shapes)
+
+
+# ---------------------------------------------------------------------------
+# batches / caches
+# ---------------------------------------------------------------------------
+def batch_shardings(batch_shapes, sharder: Sharder, mesh, accum: int = 1):
+    lead = (None,) if accum > 1 else ()
+
+    def one(path, leaf):
+        rest = (None,) * (leaf.ndim - len(lead) - 1)
+        return NamedSharding(mesh, P(*lead, sharder.batch_axes, *rest))
+
+    return jax.tree_util.tree_map_with_path(one, batch_shapes)
+
+
+def cache_spec(path, leaf, cfg: ModelConfig, sharder: Sharder, mesh) -> P:
+    """Serving-cache leaf: [L, B, S, ...]. Shard batch over the batch
+    axes and one inner dim over model (KV heads if divisible, else
+    head_dim / latent / state-heads), else replicate that dim."""
+    key = str(getattr(path[-1], "key", ""))
+    b = sharder.batch_axes
+    m = sharder.model_axis          # None under the ddp layout
+    shape = leaf.shape
+
+    def pick(idx_options):
+        spec = [None] * leaf.ndim
+        spec[1] = b
+        for i in idx_options:
+            if _div(shape[i], mesh, m):
+                spec[i] = m
+                break
+        return P(*spec)
+
+    if key in ("k", "v"):            # [L, B, S, KV, hd]
+        return pick([3, 4])
+    if key == "c":                   # [L, B, S, R]
+        return pick([3])
+    if key == "kr":                  # [L, B, S, dr]
+        return pick([3])
+    if key == "s":                   # rwkv [L, B, H, N, N]
+        return pick([2])
+    if key == "ssm":                 # mamba [L, B, H, N, P]
+        return pick([2])
+    if key == "conv":                # [L, B, 3, C]
+        return pick([3])
+    if key in ("x_tm", "x_cm"):      # [L, B, D]
+        return pick([2])
+    return P(*([None, b] + [None] * (leaf.ndim - 2)))
+
+
+def cache_shardings(cache_shapes, cfg: ModelConfig, sharder: Sharder, mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: NamedSharding(
+            mesh, cache_spec(p, l, cfg, sharder, mesh)), cache_shapes)

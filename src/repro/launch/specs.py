@@ -1,0 +1,111 @@
+"""ShapeDtypeStruct stand-ins for every model input (assignment §dry-run
+step 2): weak-type-correct, shardable, zero allocation."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ShapeSpec
+from repro.models import attention as attn
+from repro.models import mamba2, mla, rwkv6
+from repro.models.common import ModelConfig
+
+I32 = jnp.int32
+F32 = jnp.float32
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_struct(cfg: ModelConfig, shape: ShapeSpec, accum: int = 1):
+    B, S = shape.global_batch, shape.seq_len
+    lead = (accum, B // accum) if accum > 1 else (B,)
+    tok_shape = lead + ((S, cfg.n_codebooks) if cfg.family == "audio"
+                        else (S,))
+    batch = {"tokens": _sds(tok_shape, I32),
+             "labels": _sds(tok_shape, I32)}
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = _sds(lead + (cfg.n_img_tokens, cfg.d_model),
+                                     F32)
+    return batch
+
+
+def prefill_batch_struct(cfg: ModelConfig, shape: ShapeSpec):
+    B, S = shape.global_batch, shape.seq_len
+    tok_shape = (B, S, cfg.n_codebooks) if cfg.family == "audio" else (B, S)
+    batch = {"tokens": _sds(tok_shape, I32)}
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = _sds((B, cfg.n_img_tokens, cfg.d_model), F32)
+    return batch
+
+
+def cache_struct(cfg: ModelConfig, batch: int, length: int):
+    """Abstract decode caches matching transformer.forward's layout."""
+    def build():
+        if cfg.family == "rwkv":
+            return _stack(lambda: rwkv6.init_rwkv_state(cfg, batch,
+                                                        dtype=cfg.adt),
+                          cfg.n_layers)
+        if cfg.family == "hybrid":
+            k = cfg.attn_every or cfg.n_layers
+            n_apps = max(cfg.n_layers // k, 1)
+            return {
+                "mamba": _stack(lambda: mamba2.init_mamba_state(
+                    cfg, batch, dtype=cfg.adt), cfg.n_layers),
+                "attn": _stack(lambda: _mk_kv(cfg, batch, length), n_apps),
+            }
+        out = {}
+        if cfg.family == "moe" and cfg.moe_first_dense:
+            out["dense"] = _stack(lambda: _mk_kv(cfg, batch, length),
+                                  cfg.moe_first_dense)
+        n_main = cfg.n_layers - (cfg.moe_first_dense
+                                 if cfg.family == "moe" else 0)
+        out["main"] = _stack(lambda: _mk_kv(cfg, batch, length), n_main)
+        return out
+
+    return jax.eval_shape(build)
+
+
+def _mk_kv(cfg: ModelConfig, batch: int, length: int):
+    mk = mla.init_mla_cache if cfg.mla else attn.init_kv_cache
+    return mk(cfg, batch, length)
+
+
+def _stack(mk, n):
+    one = mk()
+    return jax.tree.map(
+        lambda t: jnp.broadcast_to(t[None], (n,) + t.shape), one)
+
+
+def decode_inputs_struct(cfg: ModelConfig, shape: ShapeSpec):
+    """(caches, tokens, pos) structs for serve_step."""
+    B, S = shape.global_batch, shape.seq_len
+    caches = cache_struct(cfg, B, S)
+    tok_shape = (B, 1, cfg.n_codebooks) if cfg.family == "audio" else (B, 1)
+    return caches, _sds(tok_shape, I32), _sds((), I32)
+
+
+def pick_accum(cfg: ModelConfig, shape: ShapeSpec, mesh,
+               batch_axes) -> int:
+    """Grad-accumulation factor: bound per-device f32 logits + stored
+    residuals to ~1.5 GB (EXPERIMENTS.md memory budget)."""
+    if shape.kind != "train":
+        return 1
+    nb = 1
+    for a in batch_axes:
+        nb *= mesh.shape[a]
+    b_loc = shape.global_batch // nb
+    mshard = mesh.shape["model"] if "model" in mesh.shape else 1
+    v_loc = cfg.vocab // mshard if cfg.vocab % mshard == 0 else cfg.vocab
+    budget = 1.5e9
+    accum = 1
+    while accum < b_loc:
+        logit_bytes = (b_loc // accum) * shape.seq_len * v_loc * 4
+        if logit_bytes <= budget:
+            break
+        accum *= 2
+    # keep microbatch divisible by the batch shards
+    while (shape.global_batch // accum) % nb:
+        accum //= 2
+    return max(accum, 1)

@@ -1,0 +1,3 @@
+"""Model zoo: every assigned architecture family in composable JAX."""
+from repro.models.common import ModelConfig, NO_SHARD, Sharder  # noqa: F401
+from repro.models import transformer  # noqa: F401

@@ -1,0 +1,134 @@
+"""GQA/MQA/MHA attention with flash-style chunked softmax and KV cache.
+
+Training/prefill uses an online-softmax scan over KV chunks (constant
+memory in sequence length — required for the prefill_32k cells); decode
+is a single grouped einsum against the cache. GQA is computed in grouped
+form [B, S, KV, G, hd] so key/value heads are never materialized
+repeated.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (ModelConfig, Sharder, _init, apply_rope,
+                                 rope_freqs)
+
+NEG_INF = -1e30
+
+
+def attn_params(rng, cfg: ModelConfig):
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd
+    ks = jax.random.split(rng, 4)
+    return {
+        "wq": _init(ks[0], (d, H * hd), cfg.pdt),
+        "wk": _init(ks[1], (d, KV * hd), cfg.pdt),
+        "wv": _init(ks[2], (d, KV * hd), cfg.pdt),
+        "wo": _init(ks[3], (H * hd, d), cfg.pdt),
+    }
+
+
+def _chunked_causal(q, k, v, *, q_pos0, chunk):
+    """Online-softmax causal attention.
+
+    q: [B, S, KV, G, hd]; k/v: [B, T, KV, hd]. q_pos0: absolute position
+    of q[.., 0] (k/v positions start at 0). Returns [B, S, KV, G, hd].
+    """
+    B, S, KV, G, hd = q.shape
+    T = k.shape[1]
+    chunk = min(chunk, T)
+    assert T % chunk == 0, (T, chunk)
+    nc = T // chunk
+    scale = hd ** -0.5
+    qf = q.astype(jnp.float32) * scale
+
+    kc = k.reshape(B, nc, chunk, KV, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nc, chunk, KV, hd).transpose(1, 0, 2, 3, 4)
+
+    m0 = jnp.full((B, S, KV, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, S, KV, G), jnp.float32)
+    a0 = jnp.zeros((B, S, KV, G, hd), jnp.float32)
+    qpos = q_pos0 + jnp.arange(S)
+
+    # The chunk step is checkpointed: without it the scan's backward
+    # saves the stacked per-chunk score tensors — the full S x T
+    # attention matrix, which chunking exists to avoid (flash-attention
+    # backward = recompute scores per chunk). Measured in §Perf B4.
+    @jax.checkpoint
+    def step(carry, inp):
+        ci, k_c, v_c = inp
+        m, l, acc = carry
+        s = jnp.einsum("bskgh,bckh->bskgc", qf, k_c.astype(jnp.float32))
+        kpos = ci * chunk + jnp.arange(chunk)
+        mask = qpos[:, None] >= kpos[None, :]          # [S, chunk]
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bskgc,bckh->bskgh", p, v_c.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                  (jnp.arange(nc), kc, vc))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.astype(q.dtype)
+
+
+def _decode_attn(q, k_cache, v_cache, *, pos):
+    """q: [B, 1, KV, G, hd]; caches: [B, Smax, KV, hd]; attends to <= pos."""
+    B, _, KV, G, hd = q.shape
+    Smax = k_cache.shape[1]
+    scale = hd ** -0.5
+    s = jnp.einsum("bqkgh,btkh->bkgqt", q.astype(jnp.float32) * scale,
+                   k_cache.astype(jnp.float32))
+    valid = jnp.arange(Smax)[None, :] <= pos                   # [1, Smax]
+    s = jnp.where(valid[None, None, None, :, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqt,btkh->bqkgh", p, v_cache.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def attention(x, p, cfg: ModelConfig, sharder: Sharder, *, pos=None,
+              cache=None, chunk=1024):
+    """Self-attention. Modes:
+      train/prefill : pos=None — full causal over x; returns (out, kv)
+      decode        : pos = scalar position; cache = {'k','v'} updated.
+    """
+    B, S, d = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv, cfg.hd
+    G = H // KV
+    q = jnp.einsum("bsd,dq->bsq", x, p["wq"]).reshape(B, S, H, hd)
+    k = jnp.einsum("bsd,dq->bsq", x, p["wk"]).reshape(B, S, KV, hd)
+    v = jnp.einsum("bsd,dq->bsq", x, p["wv"]).reshape(B, S, KV, hd)
+    q = sharder.act_heads(q)
+
+    pos0 = 0 if pos is None else pos
+    positions = (jnp.arange(S) + pos0) if pos is None else (
+        jnp.full((S,), pos0))
+    cos, sin = rope_freqs(positions, hd, cfg.rope_theta)
+    cos, sin = cos[None, :, None, :], sin[None, :, None, :]
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    qg = q.reshape(B, S, KV, G, hd)
+    if pos is None:
+        out = _chunked_causal(qg, k, v, q_pos0=0, chunk=chunk)
+        kv = {"k": k, "v": v}
+    else:
+        k_cache = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+        out = _decode_attn(qg, k_cache, v_cache, pos=pos)
+        kv = {"k": k_cache, "v": v_cache}
+    out = out.reshape(B, S, H * hd)
+    out = jnp.einsum("bsq,qd->bsd", out, p["wo"])
+    return out, kv
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, length: int, dtype=None):
+    dtype = dtype or cfg.adt
+    shape = (batch, length, cfg.n_kv, cfg.hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}

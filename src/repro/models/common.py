@@ -1,0 +1,202 @@
+"""Shared model machinery: config, sharding helper, norms, MLPs, RoPE."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+DTYPES = {"f16": jnp.float16, "bf16": jnp.bfloat16, "f32": jnp.float32}
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """One config covers every assigned architecture family."""
+    name: str
+    family: str                  # dense | moe | rwkv | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    d_ff: int
+    vocab: int
+    n_heads: int = 0
+    n_kv: int = 0
+    head_dim: int = 0            # 0 -> d_model // n_heads
+    mlp: str = "swiglu"          # swiglu | geglu | relu2 | gelu
+    # --- MoE ---
+    moe_experts: int = 0
+    moe_topk: int = 0
+    moe_shared: int = 0
+    moe_dff: int = 0
+    moe_capacity_factor: float = 1.25
+    moe_first_dense: int = 0     # deepseek: first k layers stay dense
+    # --- MLA (deepseek) ---
+    mla: bool = False
+    kv_lora: int = 0
+    q_lora: int = 0
+    rope_head_dim: int = 64
+    nope_head_dim: int = 128
+    v_head_dim: int = 128
+    # --- SSM (rwkv6 / mamba2) ---
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    # --- hybrid (zamba2): one shared attention block every k ssm blocks ---
+    attn_every: int = 0
+    # --- modality stubs ---
+    n_img_tokens: int = 0        # pixtral: positions fed by patch embeddings
+    n_codebooks: int = 0         # musicgen: EnCodec streams
+    # --- numerics / execution ---
+    param_dtype: str = "f32"
+    activ_dtype: str = "f32"
+    remat: bool = True
+    norm_eps: float = 1e-5
+    rope_theta: float = 10000.0
+    max_seq: int = 8192          # KV-cache length for serving
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // max(self.n_heads, 1))
+
+    @property
+    def adt(self):
+        return DTYPES[self.activ_dtype]
+
+    @property
+    def pdt(self):
+        return DTYPES[self.param_dtype]
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class Sharder:
+    """Applies GSPMD sharding constraints when a mesh is active.
+
+    Logical axes: 'batch' -> (pod, data), 'seq'/'ffn'/'heads'/'vocab' ->
+    model, 'layers' -> stacked-layer FSDP axis. On a laptop (no mesh) it
+    is the identity, so models run unmodified in smoke tests.
+    """
+    enabled: bool = False
+    batch_axes: Any = ("data",)   # ('pod','data') on the multi-pod mesh
+    model_axis: str = "model"
+    fsdp_axis: str | None = "data"   # parameter (ZeRO-3) sharding axis
+    mesh: Any = None                 # concrete Mesh (needed by shard_map ops)
+
+    def c(self, x, spec: P):
+        if not self.enabled:
+            return x
+        return jax.lax.with_sharding_constraint(x, spec)
+
+    def _msize(self) -> int:
+        if self.mesh is None or self.model_axis is None:
+            return 1
+        return self.mesh.shape[self.model_axis]
+
+    def _fits(self, dim: int) -> bool:
+        m = self._msize()
+        return m > 1 and dim % m == 0
+
+    # activation specs (divisibility-aware: a dim that doesn't divide the
+    # model axis simply stays replicated — gemma's 8 heads on a 16-way TP
+    # axis, decode's seq=1, etc.) ---------------------------------------
+    def act_bsd(self, x):        # [batch, seq, d_model] — seq-sharded (SP)
+        seq = self.model_axis if self._fits(x.shape[1]) else None
+        return self.c(x, P(self.batch_axes, seq, None))
+
+    def act_full(self, x):       # [batch, seq, d_model] — replicated d/seq
+        return self.c(x, P(self.batch_axes, None, None))
+
+    def act_heads(self, x):      # [batch, seq, heads, hd] — TP over heads
+        if self._fits(x.shape[2]):
+            return self.c(x, P(self.batch_axes, None, self.model_axis, None))
+        if self._fits(x.shape[3]):
+            return self.c(x, P(self.batch_axes, None, None, self.model_axis))
+        return self.c(x, P(self.batch_axes, None, None, None))
+
+    def act_ffn(self, x):        # [batch, seq, d_ff] — TP over ffn
+        f = self.model_axis if self._fits(x.shape[2]) else None
+        return self.c(x, P(self.batch_axes, None, f))
+
+    def logits(self, x):         # [batch, seq, vocab] — TP over vocab
+        v = self.model_axis if self._fits(x.shape[-1]) else None
+        return self.c(x, P(self.batch_axes, *(None,) * (x.ndim - 2), v))
+
+
+NO_SHARD = Sharder(enabled=False)
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+def rms_norm(x, gamma, eps):
+    """RMSNorm with f32 *statistics* but no full-width f32 tensor: the
+    variance reduction runs in f32 (numerics), the normalization stays in
+    x.dtype. Materializing x.astype(f32) puts a [B,S,D] f32 tensor right
+    at the sequence-parallel reshard point and doubles the collective
+    bytes (§Perf A4, nemotron-340b)."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1,
+                   keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * (1.0 + gamma.astype(x.dtype))
+
+
+def rope_freqs(positions, dim, theta):
+    """positions: [...] int -> (cos, sin) of shape [..., dim//2]."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions[..., None].astype(jnp.float32) * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: [..., dim] with trailing head dim; cos/sin broadcastable [..., dim/2]."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mlp_apply(x, w_in, w_gate, w_out, kind: str, sharder: Sharder):
+    """Gated / plain MLP. w_gate is None for non-gated kinds."""
+    h = jnp.einsum("bsd,df->bsf", x, w_in)
+    if kind in ("swiglu", "geglu"):
+        g = jnp.einsum("bsd,df->bsf", x, w_gate)
+        act = jax.nn.silu(g) if kind == "swiglu" else jax.nn.gelu(g)
+        h = act.astype(h.dtype) * h
+    elif kind == "relu2":       # nemotron squared-ReLU
+        h = jnp.square(jax.nn.relu(h))
+    elif kind == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        raise ValueError(kind)
+    h = sharder.act_ffn(h)
+    return jnp.einsum("bsf,fd->bsd", h, w_out)
+
+
+def mlp_params(rng, d, f, kind, dtype):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    p = {"w_in": _init(k1, (d, f), dtype),
+         "w_out": _init(k2, (f, d), dtype)}
+    if kind in ("swiglu", "geglu"):
+        p["w_gate"] = _init(k3, (d, f), dtype)
+    return p
+
+
+def _init(rng, shape, dtype, scale=None):
+    fan_in = shape[0] if len(shape) >= 2 else shape[-1]
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(rng, shape, jnp.float32) * scale).astype(dtype)
+
+
+init_dense = _init
+
+
+def cross_entropy(logits, labels, *, z_loss=1e-4):
+    """Standard LM loss with z-regularization; labels -100 are masked."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    mask = labels >= 0
+    safe = jnp.maximum(labels, 0)
+    ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (lse - ll) + z_loss * jnp.square(lse)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1)

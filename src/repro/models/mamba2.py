@@ -1,0 +1,152 @@
+"""Mamba-2 (SSD) block for the Zamba-2 hybrid architecture.
+
+State-space: per head h with head dim P and state dim N,
+    S_t = a_t * S_{t-1} + dt_t * B_t x_t^T        (S: [N, P])
+    y_t = C_t S_t + D x_t
+with a_t = exp(-dt_t * exp(A_log_h)) a data-dependent scalar decay per
+head (Mamba-2's scalar-identity A). Projections follow the mamba2 layout:
+one in_proj producing (z, x, B, C, dt), grouped RMSNorm before out_proj,
+silu gating.
+
+Implementation: chunked scan — within a chunk of length Q the recurrence
+is evaluated with the quadratic "attention form" (MXU-friendly), across
+chunks a lax.scan carries the state. Q=128 default keeps the quadratic
+term tiny while the chunk GEMMs are MXU-aligned. Decode is the O(1)
+single-step recurrence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, Sharder, _init, rms_norm
+
+EXPAND = 2
+CHUNK = 128
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = EXPAND * cfg.d_model
+    P = cfg.ssm_head_dim
+    H = d_inner // P
+    N = cfg.ssm_state
+    return d_inner, H, P, N
+
+
+def mamba_params(rng, cfg: ModelConfig):
+    d = cfg.d_model
+    d_inner, H, P, N = _dims(cfg)
+    ks = jax.random.split(rng, 4)
+    conv_dim = d_inner + 2 * N  # x, B, C go through the short conv
+    return {
+        "ln": jnp.zeros((d,), cfg.pdt),
+        "w_in": _init(ks[0], (d, 2 * d_inner + 2 * N + H), cfg.pdt),
+        "conv_w": _init(ks[1], (4, conv_dim), cfg.pdt),   # depthwise, k=4
+        "A_log": jnp.zeros((H,), cfg.pdt),
+        "D": jnp.ones((H,), cfg.pdt),
+        "dt_bias": jnp.zeros((H,), cfg.pdt),
+        "ssm_norm": jnp.zeros((d_inner,), cfg.pdt),
+        "w_out": _init(ks[2], (d_inner, d), cfg.pdt),
+    }
+
+
+def _dw_conv(x, w, x_prev):
+    """Depthwise causal conv, kernel 4. x: [B,S,C]; x_prev: [B,3,C] carry.
+    Returns (y, new carry)."""
+    full = jnp.concatenate([x_prev, x], axis=1)          # [B, S+3, C]
+    k = w.shape[0]
+    y = sum(full[:, i:i + x.shape[1], :] * w[i][None, None, :]
+            for i in range(k))
+    return y, full[:, -3:, :]
+
+
+def _ssd_chunk_scan(xh, bmat, cmat, dt, a, state0):
+    """Chunked SSD recurrence.
+
+    xh: [B,S,H,P] inputs; bmat/cmat: [B,S,N]; dt: [B,S,H] (>0);
+    a:  [B,S,H] per-step decay in (0,1]; state0: [B,H,N,P].
+    Returns (y [B,S,H,P], state_T).
+    """
+    B, S, H, P = xh.shape
+    N = bmat.shape[-1]
+    Q = min(CHUNK, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+
+    def chunk(state, inp):
+        x_c, b_c, c_c, dt_c, a_c = inp    # [B,Q,...]
+        la = jnp.log(jnp.maximum(a_c, 1e-37))            # [B,Q,H]
+        cum = jnp.cumsum(la, axis=1)                     # prefix sums
+        # intra-chunk "attention" term: y_t += sum_{u<=t} C_t.B_u decay x_u
+        seg = cum[:, :, None, :] - cum[:, None, :, :]    # [B,Q,Q,H] = sum_(u,t]
+        tri = jnp.tril(jnp.ones((Q, Q), bool))
+        gamma = jnp.where(tri[None, :, :, None], jnp.exp(seg), 0.0)
+        cb = jnp.einsum("btn,bun->btu", c_c.astype(jnp.float32),
+                        b_c.astype(jnp.float32))         # [B,Q,Q]
+        mat = cb[..., None] * gamma                      # [B,Q,Q,H]
+        xdt = x_c.astype(jnp.float32) * dt_c[..., None]  # [B,Q,H,P]
+        y = jnp.einsum("btuh,buhp->bthp", mat, xdt)
+        # inter-chunk: contribution of carried-in state
+        decay_in = jnp.exp(cum)                          # [B,Q,H]
+        y = y + jnp.einsum("btn,bhnp,bth->bthp",
+                           c_c.astype(jnp.float32), state,
+                           decay_in)
+        # state update: S' = a_total * S + sum_u decay_(u,T] dt_u B_u x_u^T
+        tot = cum[:, -1, :]                              # [B,H]
+        decay_out = jnp.exp(tot[:, None, :] - cum)       # [B,Q,H]
+        upd = jnp.einsum("bun,buhp,buh->bhnp",
+                         b_c.astype(jnp.float32), xdt, decay_out)
+        state = jnp.exp(tot)[:, :, None, None] * state + upd
+        return state, y
+
+    resh = lambda t: jnp.moveaxis(
+        t.reshape(B, nc, Q, *t.shape[2:]), 1, 0)
+    xs = (resh(xh), resh(bmat), resh(cmat), resh(dt), resh(a))
+    state, ys = jax.lax.scan(chunk, state0.astype(jnp.float32), xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, P)
+    return y.astype(xh.dtype), state
+
+
+def mamba_block(x, p, cfg: ModelConfig, sharder: Sharder, *, state=None):
+    """Full Mamba-2 block with residual. state: {"ssm","conv"} or None."""
+    B, S, d = x.shape
+    d_inner, H, P, N = _dims(cfg)
+    if state is None:
+        state = init_mamba_state(cfg, B, dtype=x.dtype)
+
+    xn = rms_norm(x, p["ln"], cfg.norm_eps)
+    zxbcdt = jnp.einsum("bsd,de->bse", xn, p["w_in"])
+    z, xc, bmat, cmat, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + N, 2 * d_inner + 2 * N],
+        axis=-1)
+    conv_in = jnp.concatenate([xc, bmat, cmat], axis=-1)
+    conv_out, conv_state = _dw_conv(conv_in, p["conv_w"].astype(x.dtype),
+                                    state["conv"])
+    conv_out = jax.nn.silu(conv_out)
+    xc, bmat, cmat = jnp.split(conv_out, [d_inner, d_inner + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))     # [B,S,H]
+    a = jnp.exp(-dt * jnp.exp(p["A_log"].astype(jnp.float32)))   # (0,1]
+    xh = xc.reshape(B, S, H, P)
+    xh = sharder.act_heads(xh)
+    y, ssm_state = _ssd_chunk_scan(xh, bmat, cmat, dt, a, state["ssm"])
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * \
+        xh.astype(jnp.float32)
+    y = y.astype(x.dtype).reshape(B, S, d_inner)
+    y = rms_norm(y * jax.nn.silu(z).astype(y.dtype), p["ssm_norm"],
+                 cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    new_state = {"ssm": ssm_state.astype(state["ssm"].dtype),
+                 "conv": conv_state}
+    # seq-shard the residual between blocks (SP): without this the remat
+    # checkpoint of every layer input is replicated over the model axis
+    # (zamba2 train_4k baseline: 47 GiB/dev; see EXPERIMENTS.md §Perf B1)
+    return sharder.act_bsd(x + out), new_state
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype=None):
+    dtype = dtype or cfg.adt
+    d_inner, H, P, N = _dims(cfg)
+    return {"ssm": jnp.zeros((batch, H, N, P), jnp.float32),
+            "conv": jnp.zeros((batch, 3, d_inner + 2 * N), dtype)}

@@ -1,0 +1,121 @@
+"""Multi-head Latent Attention (DeepSeek V2/V3).
+
+Faithful structure: queries (optionally LoRA-compressed), a shared
+compressed KV latent of width ``kv_lora`` plus a decoupled RoPE key of
+width ``rope_head_dim``. The serving cache stores ONLY the latent and the
+rope key (the MLA memory advantage); decode uses the absorbed-weight
+formulation (q absorbed through W_uk, output through W_uv) so the
+per-head keys are never materialized at decode time.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import _chunked_causal, NEG_INF
+from repro.models.common import (ModelConfig, Sharder, _init, apply_rope,
+                                 rope_freqs, rms_norm)
+
+
+def mla_params(rng, cfg: ModelConfig):
+    d, H = cfg.d_model, cfg.n_heads
+    dn, dr, dv = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(rng, 8)
+    p = {
+        "w_dkv": _init(ks[0], (d, cfg.kv_lora), cfg.pdt),
+        "kv_norm": jnp.zeros((cfg.kv_lora,), cfg.pdt),
+        "w_uk": _init(ks[1], (cfg.kv_lora, H * dn), cfg.pdt),
+        "w_uv": _init(ks[2], (cfg.kv_lora, H * dv), cfg.pdt),
+        "w_kr": _init(ks[3], (d, dr), cfg.pdt),
+        "wo": _init(ks[4], (H * dv, d), cfg.pdt),
+    }
+    if cfg.q_lora:
+        p["w_dq"] = _init(ks[5], (d, cfg.q_lora), cfg.pdt)
+        p["q_norm"] = jnp.zeros((cfg.q_lora,), cfg.pdt)
+        p["w_uq"] = _init(ks[6], (cfg.q_lora, H * (dn + dr)), cfg.pdt)
+    else:
+        p["wq"] = _init(ks[7], (d, H * (dn + dr)), cfg.pdt)
+    return p
+
+
+def _queries(x, p, cfg: ModelConfig):
+    B, S, _ = x.shape
+    H, dn, dr = cfg.n_heads, cfg.nope_head_dim, cfg.rope_head_dim
+    if cfg.q_lora:
+        cq = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["w_dq"]),
+                      p["q_norm"], cfg.norm_eps)
+        q = jnp.einsum("bsr,rq->bsq", cq, p["w_uq"])
+    else:
+        q = jnp.einsum("bsd,dq->bsq", x, p["wq"])
+    q = q.reshape(B, S, H, dn + dr)
+    return q[..., :dn], q[..., dn:]
+
+
+def mla_attention(x, p, cfg: ModelConfig, sharder: Sharder, *, pos=None,
+                  cache=None, chunk=1024):
+    B, S, d = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    q_nope, q_rope = _queries(x, p, cfg)
+    q_nope = sharder.act_heads(q_nope)
+
+    c_kv = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["w_dkv"]),
+                    p["kv_norm"], cfg.norm_eps)                 # [B,S,R]
+    k_rope = jnp.einsum("bsd,dr->bsr", x, p["w_kr"])            # [B,S,dr]
+
+    pos0 = 0 if pos is None else pos
+    positions = (jnp.arange(S) + pos0) if pos is None else (
+        jnp.full((S,), pos0))
+    cos, sin = rope_freqs(positions, dr, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos[None, :, None, :], sin[None, :, None, :])
+    k_rope = apply_rope(k_rope, cos[None, :, :], sin[None, :, :])
+
+    if pos is None:
+        # train/prefill: decompress per-head k/v, run shared flash path.
+        k_nope = jnp.einsum("bsr,rq->bsq", c_kv,
+                            p["w_uk"]).reshape(B, S, H, dn)
+        v = jnp.einsum("bsr,rq->bsq", c_kv, p["w_uv"]).reshape(B, S, H, dv)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, dr))],
+            axis=-1)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        # pad v to k's head dim for the shared kernel, trim after
+        pad = (dn + dr) - dv
+        vp = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, pad)))
+        out = _chunked_causal(q[:, :, :, None, :].transpose(0, 1, 2, 3, 4)
+                              .reshape(B, S, H, 1, dn + dr),
+                              k, vp, q_pos0=0, chunk=chunk)
+        out = out.reshape(B, S, H, dn + dr)[..., :dv]
+        new_cache = {"c": c_kv, "kr": k_rope}
+    else:
+        # absorbed decode: score = q_nope W_uk^T . c  +  q_rope . k_rope
+        c_cache = jax.lax.dynamic_update_slice(
+            cache["c"], c_kv.astype(cache["c"].dtype), (0, pos, 0))
+        kr_cache = jax.lax.dynamic_update_slice(
+            cache["kr"], k_rope.astype(cache["kr"].dtype), (0, pos, 0))
+        w_uk = p["w_uk"].reshape(cfg.kv_lora, H, dn)
+        q_abs = jnp.einsum("bshn,rhn->bshr", q_nope.astype(jnp.float32),
+                           w_uk.astype(jnp.float32))            # [B,1,H,R]
+        s = (jnp.einsum("bshr,btr->bhst", q_abs,
+                        c_cache.astype(jnp.float32))
+             + jnp.einsum("bshr,btr->bhst", q_rope.astype(jnp.float32),
+                          kr_cache.astype(jnp.float32)))
+        s = s * ((dn + dr) ** -0.5)
+        Smax = c_cache.shape[1]
+        valid = jnp.arange(Smax)[None, :] <= pos
+        s = jnp.where(valid[None, None, :, :], s, NEG_INF)
+        pattn = jax.nn.softmax(s, axis=-1)
+        o_lat = jnp.einsum("bhst,btr->bshr", pattn,
+                           c_cache.astype(jnp.float32))         # [B,1,H,R]
+        w_uv = p["w_uv"].reshape(cfg.kv_lora, H, dv)
+        out = jnp.einsum("bshr,rhv->bshv", o_lat,
+                         w_uv.astype(jnp.float32)).astype(x.dtype)
+        new_cache = {"c": c_cache, "kr": kr_cache}
+    out = out.reshape(B, S, H * dv)
+    return jnp.einsum("bsq,qd->bsd", out, p["wo"]), new_cache
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, length: int, dtype=None):
+    dtype = dtype or cfg.adt
+    return {"c": jnp.zeros((batch, length, cfg.kv_lora), dtype),
+            "kr": jnp.zeros((batch, length, cfg.rope_head_dim), dtype)}

@@ -1,0 +1,153 @@
+"""RWKV-6 "Finch" block (attention-free, data-dependent decay).
+
+Time mixing per head (head dim N):
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t          (state: N x N per head)
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+with w_t = exp(-exp(w0 + LoRA(x~_t))) a *data-dependent* per-channel
+decay (the Finch contribution), token-shift interpolation on every
+projection input, and a gated output. Channel mixing is the standard
+RWKV squared-ReLU FFN.
+
+Training/prefill run a lax.scan over time carrying (state, last token);
+decode is a single recurrence step — O(1) memory in sequence length,
+which is why rwkv6-3b runs the long_500k cell.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, Sharder, _init, rms_norm
+
+LORA_R = 64
+
+
+def rwkv_params(rng, cfg: ModelConfig):
+    d = cfg.d_model
+    N = cfg.ssm_head_dim
+    H = d // N
+    ks = jax.random.split(rng, 16)
+    p = {
+        # token-shift mixing coefficients (per-channel, for r/k/v/w/g)
+        "mu": jnp.zeros((5, d), cfg.pdt),
+        "wr": _init(ks[0], (d, d), cfg.pdt),
+        "wk": _init(ks[1], (d, d), cfg.pdt),
+        "wv": _init(ks[2], (d, d), cfg.pdt),
+        "wg": _init(ks[3], (d, d), cfg.pdt),
+        "wo": _init(ks[4], (d, d), cfg.pdt),
+        "w0": jnp.zeros((d,), cfg.pdt),             # base decay
+        "w_lora_a": _init(ks[5], (d, LORA_R), cfg.pdt),
+        "w_lora_b": _init(ks[6], (LORA_R, d), cfg.pdt, scale=0.01),
+        "u": jnp.zeros((H, N), cfg.pdt),            # bonus
+        "ln_x": jnp.zeros((d,), cfg.pdt),
+        # channel mixing
+        "mu_c": jnp.zeros((2, d), cfg.pdt),
+        "ck": _init(ks[7], (d, cfg.d_ff), cfg.pdt),
+        "cv": _init(ks[8], (cfg.d_ff, d), cfg.pdt),
+        "cr": _init(ks[9], (d, d), cfg.pdt),
+        "ln1": jnp.zeros((d,), cfg.pdt),
+        "ln2": jnp.zeros((d,), cfg.pdt),
+    }
+    return p
+
+
+def _shift_mix(x, x_prev, mu):
+    """Token shift: lerp(x_t, x_{t-1}, mu). x: [B,S,D]; x_prev: [B,D]."""
+    shifted = jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+    return x + (shifted - x) * mu
+
+
+TIME_CHUNK = 128
+
+
+def _time_mix_scan(r, k, v, w, u, state0):
+    """r/k/v: [B,S,H,N]; w: [B,S,H,N] decay in (0,1); state0: [B,H,N,N].
+    Returns (out [B,S,H,N], state_T).
+
+    Two-level scan: the outer scan carries state across TIME_CHUNK-sized
+    chunks and checkpoints each chunk, so the backward pass stores
+    S/TIME_CHUNK states instead of S (the classic RNN-remat trick —
+    without it a 4k-token train step would save 4096 per-step states).
+    """
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp                        # [B,H,N]
+        kv = k_t[..., :, None] * v_t[..., None, :]      # [B,H,N,N]
+        # bonus term (u ⊙ k_t)ᵀ v_t contracts with r_t to a per-head scalar
+        bonus = jnp.sum(r_t * u[None] * k_t, axis=-1, keepdims=True)
+        o = jnp.einsum("bhn,bhnm->bhm", r_t, s) + bonus * v_t
+        s = w_t[..., :, None] * s + kv
+        return s, o
+
+    B, S, H, N = r.shape
+    ck = min(TIME_CHUNK, S)
+    if S % ck:
+        ck = 1
+    nc = S // ck
+
+    @jax.checkpoint
+    def chunk(s, inp):
+        xs = tuple(jnp.moveaxis(t, 1, 0) for t in inp)  # [ck,B,H,N]
+        s, out = jax.lax.scan(step, s, xs)
+        return s, jnp.moveaxis(out, 0, 1)               # [B,ck,H,N]
+
+    resh = lambda t: jnp.moveaxis(t.reshape(B, nc, ck, H, N), 1, 0)
+    state, outs = jax.lax.scan(chunk, state0,
+                               tuple(resh(t) for t in (r, k, v, w)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, S, H, N)
+    return out, state
+
+
+def rwkv_block(x, p, cfg: ModelConfig, sharder: Sharder, *, state=None):
+    """One full RWKV block (time mix + channel mix).
+
+    state: {"s": [B,H,N,N], "x_tm": [B,D], "x_cm": [B,D]} or None (zeros).
+    Returns (y, new_state)."""
+    B, S, d = x.shape
+    N = cfg.ssm_head_dim
+    H = d // N
+    if state is None:
+        state = init_rwkv_state(cfg, B, dtype=x.dtype)
+
+    xn = rms_norm(x, p["ln1"], cfg.norm_eps)
+    mu = p["mu"][:, None, None, :].astype(x.dtype)      # [5,1,1,D]
+    xr, xk, xv, xw, xg = (_shift_mix(xn, state["x_tm"], mu[i])
+                          for i in range(5))
+    r = jnp.einsum("bsd,de->bse", xr, p["wr"]).reshape(B, S, H, N)
+    k = jnp.einsum("bsd,de->bse", xk, p["wk"]).reshape(B, S, H, N)
+    v = jnp.einsum("bsd,de->bse", xv, p["wv"]).reshape(B, S, H, N)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["wg"]))
+    r = sharder.act_heads(r)
+
+    dec = p["w0"].astype(jnp.float32) + jnp.einsum(
+        "bsd,dr,re->bse", xw.astype(jnp.float32),
+        p["w_lora_a"].astype(jnp.float32), p["w_lora_b"].astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(dec)).reshape(B, S, H, N).astype(x.dtype)
+
+    out, s_new = _time_mix_scan(r, k, v, w, p["u"].astype(x.dtype),
+                                state["s"])
+    out = rms_norm(out.reshape(B, S, d), p["ln_x"], cfg.norm_eps)
+    out = jnp.einsum("bsd,de->bse", out * g.astype(out.dtype), p["wo"])
+    y = x + out
+
+    # channel mixing
+    yn = rms_norm(y, p["ln2"], cfg.norm_eps)
+    mu_c = p["mu_c"][:, None, None, :].astype(x.dtype)
+    xck = _shift_mix(yn, state["x_cm"], mu_c[0])
+    xcr = _shift_mix(yn, state["x_cm"], mu_c[1])
+    kk = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xck, p["ck"])))
+    kk = sharder.act_ffn(kk)
+    cm = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xcr, p["cr"])) * \
+        jnp.einsum("bsf,fd->bsd", kk, p["cv"]).astype(x.dtype)
+    y = sharder.act_bsd(y + cm.astype(y.dtype))
+
+    new_state = {"s": s_new, "x_tm": xn[:, -1, :], "x_cm": yn[:, -1, :]}
+    return y, new_state
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int, dtype=None):
+    dtype = dtype or cfg.adt
+    N = cfg.ssm_head_dim
+    H = cfg.d_model // N
+    return {"s": jnp.zeros((batch, H, N, N), dtype),
+            "x_tm": jnp.zeros((batch, cfg.d_model), dtype),
+            "x_cm": jnp.zeros((batch, cfg.d_model), dtype)}

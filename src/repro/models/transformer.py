@@ -1,0 +1,359 @@
+"""Model backbone: stacked-layer scan over blocks, all families.
+
+Families (ModelConfig.family):
+  dense   — attention + MLP (nemotron, gemma, granite)
+  vlm     — dense backbone, first n_img_tokens positions fed by projected
+            patch embeddings (pixtral stub frontend)
+  audio   — dense backbone over summed codebook embeddings, per-codebook
+            logit heads (musicgen stub frontend)
+  moe     — MLA attention + (shared+routed) MoE FFN (deepseek v2/v3);
+            first ``moe_first_dense`` layers use a dense MLP
+  rwkv    — RWKV-6 blocks (attention-free)
+  hybrid  — Mamba-2 blocks with one *param-shared* attention+MLP block
+            applied every ``attn_every`` layers (zamba2)
+
+Execution modes:
+  train   — full sequence, no KV caches materialized (remat-friendly)
+  prefill — full sequence, returns per-layer caches of length S
+  decode  — one token at position ``pos`` against caller-provided caches
+
+Layers are stacked ([L, ...] leaves) and executed with lax.scan (+ per
+layer remat) so the HLO stays O(1) in depth — required for the 96-layer
+dry-runs to compile in reasonable time.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import mamba2, mla, moe, rwkv6
+from repro.models.common import (ModelConfig, NO_SHARD, Sharder, _init,
+                                 cross_entropy, mlp_apply, mlp_params,
+                                 rms_norm)
+
+AUX_LOSS_W = 0.01
+
+
+# ---------------------------------------------------------------------------
+# parameter init (vmapped over layers => stacked [L, ...] leaves)
+# ---------------------------------------------------------------------------
+def _tf_layer_params(rng, cfg: ModelConfig, *, use_moe: bool):
+    k1, k2 = jax.random.split(rng)
+    p = {"ln1": jnp.zeros((cfg.d_model,), cfg.pdt),
+         "ln2": jnp.zeros((cfg.d_model,), cfg.pdt)}
+    p["attn"] = (mla.mla_params(k1, cfg) if cfg.mla
+                 else attn.attn_params(k1, cfg))
+    if use_moe:
+        p["moe"] = moe.moe_params(k2, cfg)
+    else:
+        p["mlp"] = mlp_params(k2, cfg.d_model, cfg.d_ff, cfg.mlp, cfg.pdt)
+    return p
+
+
+def init_params(rng, cfg: ModelConfig):
+    ks = jax.random.split(rng, 8)
+    d = cfg.d_model
+    params: dict[str, Any] = {
+        "final_ln": jnp.zeros((d,), cfg.pdt),
+    }
+    if cfg.family == "audio":
+        params["embed"] = _init(ks[0], (cfg.n_codebooks, cfg.vocab, d),
+                                cfg.pdt)
+        params["lm_head"] = _init(ks[1], (cfg.n_codebooks, d, cfg.vocab),
+                                  cfg.pdt)
+    else:
+        params["embed"] = _init(ks[0], (cfg.vocab, d), cfg.pdt)
+        params["lm_head"] = _init(ks[1], (d, cfg.vocab), cfg.pdt)
+    if cfg.family == "vlm":
+        params["patch_proj"] = _init(ks[2], (d, d), cfg.pdt)
+
+    L = cfg.n_layers
+    if cfg.family == "rwkv":
+        params["layers"] = jax.vmap(
+            lambda k: rwkv6.rwkv_params(k, cfg))(jax.random.split(ks[3], L))
+    elif cfg.family == "hybrid":
+        params["layers"] = jax.vmap(
+            lambda k: mamba2.mamba_params(k, cfg))(jax.random.split(ks[3], L))
+        params["shared_attn"] = _tf_layer_params(ks[4], cfg, use_moe=False)
+    elif cfg.family == "moe":
+        nd = cfg.moe_first_dense
+        if nd:
+            params["dense_layers"] = jax.vmap(
+                lambda k: _tf_layer_params(k, cfg, use_moe=False))(
+                    jax.random.split(ks[5], nd))
+        params["layers"] = jax.vmap(
+            lambda k: _tf_layer_params(k, cfg, use_moe=True))(
+                jax.random.split(ks[3], L - nd))
+    else:
+        params["layers"] = jax.vmap(
+            lambda k: _tf_layer_params(k, cfg, use_moe=False))(
+                jax.random.split(ks[3], L))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+def _tf_block(x, p, cfg: ModelConfig, sharder: Sharder, *, use_moe: bool,
+              pos=None, cache=None):
+    """Returns (x, kv_or_cache, aux).
+
+    Sequence-parallel discipline: the residual stream x is seq-sharded;
+    norms run in the sharded domain (row-local); the seq all-gather is
+    pinned to the *bf16 norm output* via act_full — without the pin the
+    SPMD partitioner reshards the norm's f32 internals, doubling the
+    gather/all-reduce bytes (§Perf A1, nemotron-340b)."""
+    # The act_full pin helps exactly when attention is head-sharded over
+    # the model axis (the big-TP archs: −61 % collectives on
+    # nemotron-340b, §Perf A1); when heads don't divide the axis (gemma's
+    # 8 heads on 16-way TP) the pin forces gathers GSPMD would otherwise
+    # avoid (+3.2x collectives measured) — so it is conditional.
+    pin = sharder._fits(cfg.n_heads) if cfg.n_heads else False
+
+    def norm_then_gather(x, gamma):
+        h = rms_norm(x, gamma, cfg.norm_eps)
+        if not pin:
+            return h
+        # pin the bf16 norm output seq-sharded FIRST, then gather: the
+        # collective moves a bf16 tensor between two pinned points, and
+        # the norm's f32 internals can never be the gathered operand
+        return sharder.act_full(sharder.act_bsd(h))
+
+    h = norm_then_gather(x, p["ln1"])
+    attn_fn = mla.mla_attention if cfg.mla else attn.attention
+    a, kv = attn_fn(h, p["attn"], cfg, sharder, pos=pos, cache=cache)
+    # constrain the branch output seq-sharded BEFORE the residual add:
+    # the TP contraction's all-reduce becomes a reduce-scatter (half the
+    # bytes) and the add runs fully in the sharded domain (§Perf A3)
+    x = x + (sharder.act_bsd(a) if pin else a)
+    h = norm_then_gather(x, p["ln2"])
+    aux = jnp.float32(0.0)
+    if use_moe:
+        f, aux = moe.moe_ffn(h, p["moe"], cfg, sharder)
+    else:
+        f = mlp_apply(h, p["mlp"]["w_in"], p["mlp"].get("w_gate"),
+                      p["mlp"]["w_out"], cfg.mlp, sharder)
+    x = (x + sharder.act_bsd(f)) if pin else sharder.act_bsd(x + f)
+    return x, kv, aux
+
+
+# ---------------------------------------------------------------------------
+# embedding / heads (modality stubs live here)
+# ---------------------------------------------------------------------------
+def embed_inputs(params, batch, cfg: ModelConfig, sharder: Sharder, *,
+                 decode: bool = False):
+    if cfg.family == "audio":
+        toks = batch["tokens"]            # [B, S, n_codebooks]
+        x = sum(jnp.take(params["embed"][i], toks[..., i], axis=0)
+                for i in range(cfg.n_codebooks))
+    else:
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    if cfg.family == "vlm" and cfg.n_img_tokens and not decode:
+        # stub frontend: precomputed patch embeddings occupy the first
+        # n_img positions (projected into the backbone width)
+        pe = jnp.einsum("bnd,de->bne", batch["patch_embeds"],
+                        params["patch_proj"]).astype(x.dtype)
+        n = cfg.n_img_tokens
+        x = jnp.concatenate([pe[:, :n], x[:, n:]], axis=1)
+    return sharder.act_bsd(x.astype(cfg.adt))
+
+
+def lm_logits(params, x, cfg: ModelConfig, sharder: Sharder):
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    if cfg.family == "audio":
+        out = jnp.einsum("bsd,cdv->bscv", x, params["lm_head"])
+        return out.astype(jnp.float32)
+    out = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    return sharder.logits(out).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# scan helpers
+# ---------------------------------------------------------------------------
+def _scan(x, stacked, fn, cfg: ModelConfig, carries=None, collect=False):
+    """Scan ``fn(x, p_l, c_l) -> (x, out_l, aux)`` over stacked layers.
+
+    carries: stacked per-layer states (xs input) or None.
+    collect : stack per-layer outputs (prefill kv / updated caches).
+    """
+    def body(carry, inp):
+        x, aux = carry
+        p_l, c_l = inp
+        x, out_l, a = fn(x, p_l, c_l)
+        return (x, aux + a), (out_l if collect else None)
+
+    wrapped = jax.checkpoint(body) if cfg.remat else body
+    (x, aux), outs = jax.lax.scan(
+        wrapped, (x, jnp.float32(0.0)), (stacked, carries))
+    return x, aux, outs
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+def forward(params, batch, cfg: ModelConfig, sharder: Sharder = NO_SHARD,
+            *, mode: str = "train", caches=None, pos=None,
+            last_only: bool = False):
+    """Returns (logits, aux_loss, new_caches).
+
+    mode='train'  : caches/pos ignored; new_caches is None (or final SSM
+                    states for recurrent families — they are cheap).
+    mode='prefill': new_caches hold per-layer KV (length S) / SSM states.
+    mode='decode' : batch tokens have S=1; ``caches`` required; ``pos`` is
+                    the absolute write/attend position (scalar int32).
+    last_only     : compute logits for the final position only (prefill
+                    serving path — avoids the [B, S, V] tensor).
+    """
+    assert mode in ("train", "prefill", "decode"), mode
+    decode = mode == "decode"
+    collect = mode != "train"
+    x = embed_inputs(params, batch, cfg, sharder, decode=decode)
+    B = x.shape[0]
+
+    def head(params, x):
+        return lm_logits(params, x[:, -1:] if last_only else x, cfg,
+                         sharder)
+
+    if cfg.family == "rwkv":
+        def fn(x, p_l, c_l):
+            y, s = rwkv6.rwkv_block(x, p_l, cfg, sharder, state=c_l)
+            return y, s, jnp.float32(0.0)
+        states = caches if caches is not None else _stacked_states(
+            lambda: rwkv6.init_rwkv_state(cfg, B, dtype=cfg.adt),
+            cfg.n_layers)
+        # recurrent states are tiny: always carry & collect them
+        x, aux, new_states = _scan(x, params["layers"], fn, cfg, states,
+                                   collect=True)
+        return head(params, x), aux, new_states
+
+    if cfg.family == "hybrid":
+        return _forward_hybrid(params, x, cfg, sharder, mode=mode,
+                               caches=caches, pos=pos, head=head)
+
+    # transformer families ------------------------------------------------
+    aux_total = jnp.float32(0.0)
+    new_caches: dict[str, Any] = {}
+    blk_pos = pos if decode else None
+
+    def make_fn(use_moe):
+        def fn(x, p_l, c_l):
+            return _tf_block(x, p_l, cfg, sharder, use_moe=use_moe,
+                             pos=blk_pos, cache=c_l)
+        return fn
+
+    if cfg.family == "moe" and cfg.moe_first_dense:
+        c = caches["dense"] if decode else None
+        x, aux, nc = _scan(x, params["dense_layers"], make_fn(False), cfg,
+                           c, collect=collect)
+        aux_total += aux
+        new_caches["dense"] = nc
+
+    use_moe = cfg.family == "moe"
+    c = caches["main"] if decode else None
+    x, aux, nc = _scan(x, params["layers"], make_fn(use_moe), cfg, c,
+                       collect=collect)
+    aux_total += aux
+    new_caches["main"] = nc
+    return (head(params, x), aux_total,
+            new_caches if collect else None)
+
+
+def _stacked_states(mk, n):
+    one = mk()
+    return jax.tree.map(
+        lambda t: jnp.broadcast_to(t[None], (n,) + t.shape), one)
+
+
+def _forward_hybrid(params, x, cfg: ModelConfig, sharder: Sharder, *,
+                    mode, caches=None, pos=None, head=None):
+    """Zamba2: groups of mamba blocks with one shared attention block
+    between groups (params shared; each application has its own cache)."""
+    B = x.shape[0]
+    decode = mode == "decode"
+    k = cfg.attn_every or cfg.n_layers
+    n_apps = max(cfg.n_layers // k, 1)
+    Lg = cfg.n_layers // n_apps
+    if caches is not None:
+        m_states, a_caches = caches["mamba"], caches["attn"]
+    else:
+        m_states = _stacked_states(
+            lambda: mamba2.init_mamba_state(cfg, B, dtype=cfg.adt),
+            cfg.n_layers)
+        a_caches = None
+
+    def fn(x, p_l, c_l):
+        y, s = mamba2.mamba_block(x, p_l, cfg, sharder, state=c_l)
+        return y, s, jnp.float32(0.0)
+
+    collect = mode != "train"
+    new_m, new_a = [], []
+    blk_pos = pos if decode else None
+
+    def shared_block(x, p, ac):
+        return _tf_block(x, p, cfg, sharder, use_moe=False, pos=blk_pos,
+                         cache=ac)
+
+    if cfg.remat:
+        # the shared block runs outside the layer scan; without its own
+        # checkpoint every application's attention intermediates are
+        # live until backward (zamba2 §Perf B2: 47 GiB/dev baseline)
+        shared_block = jax.checkpoint(shared_block)
+
+    for g in range(n_apps):
+        sl = jax.tree.map(lambda t: t[g * Lg:(g + 1) * Lg], params["layers"])
+        st = jax.tree.map(lambda t: t[g * Lg:(g + 1) * Lg], m_states)
+        x, _, ns = _scan(x, sl, fn, cfg, st, collect=collect)
+        new_m.append(ns)
+        ac = (jax.tree.map(lambda t: t[g], a_caches)
+              if decode else None)
+        x, kv, _ = shared_block(x, params["shared_attn"], ac)
+        new_a.append(kv)
+    if collect:
+        new_caches = {
+            "mamba": jax.tree.map(lambda *ts: jnp.concatenate(ts, 0),
+                                  *new_m),
+            "attn": jax.tree.map(lambda *ts: jnp.stack(ts, 0), *new_a),
+        }
+    else:
+        new_caches = None
+    logits = (head(params, x) if head is not None
+              else lm_logits(params, x, cfg, sharder))
+    return logits, jnp.float32(0.0), new_caches
+
+
+def pad_caches(caches, to_len: int):
+    """Grow prefill caches (length S) to a decode buffer of ``to_len``.
+
+    Only sequence-indexed attention leaves (k/v/c/kr) are padded; SSM
+    states carry no sequence axis and pass through unchanged.
+    """
+    SEQ_LEAVES = {"k", "v", "c", "kr"}
+
+    def pad(path, leaf):
+        key = path[-1].key if hasattr(path[-1], "key") else None
+        if key in SEQ_LEAVES and leaf.ndim >= 4:
+            s = leaf.shape[2]
+            if s < to_len:
+                cfgpad = [(0, 0)] * leaf.ndim
+                cfgpad[2] = (0, to_len - s)
+                return jnp.pad(leaf, cfgpad)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(pad, caches)
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+def loss_fn(params, batch, cfg: ModelConfig, sharder: Sharder = NO_SHARD):
+    logits, aux, _ = forward(params, batch, cfg, sharder, mode="train")
+    if cfg.family == "audio":
+        losses = [cross_entropy(logits[:, :, i], batch["labels"][..., i])
+                  for i in range(cfg.n_codebooks)]
+        ce = sum(losses) / cfg.n_codebooks
+    else:
+        ce = cross_entropy(logits, batch["labels"])
+    return ce + AUX_LOSS_W * aux, {"ce": ce, "aux": aux}

@@ -1,0 +1,4 @@
+"""Optimizers: AdamW + TreeNewton (K-FAC-style, tree-Cholesky solves)."""
+from repro.optim import adamw, kfac  # noqa: F401
+from repro.optim.adamw import AdamWConfig  # noqa: F401
+from repro.optim.kfac import TreeNewtonConfig  # noqa: F401

@@ -1,0 +1,169 @@
+"""Tree-Newton: Kronecker-factored preconditioning whose SPD solves run
+through the paper's mixed-precision tree-Cholesky (DESIGN.md §4.5).
+
+This is the production integration of the paper's solver into the LM
+trainer: per-matrix second-moment factors
+
+    A = EMA[ G G^T ] + damping * tr(A)/n * I        (block-diagonal)
+
+are factorized every ``factor_every`` steps with ``tree_potrf`` under the
+configured precision ladder, and every step the gradient direction is
+whitened by the cached factor via two ``tree_trsm_left`` solves
+(L L^T X = G). The magnitude is *grafted* from AdamW (distributed-Shampoo
+practice), so the solver provides the direction and Adam provides the
+scale — a one-sided, Cholesky-based relative of Shampoo/K-FAC that is
+stable at power -1.
+
+Large matrices are partitioned into ``block`` x ``block`` diagonal blocks
+(Shampoo blocking), which is also exactly the regime the paper's
+recursive solver targets: many independent SPD factorizations per step,
+batched with vmap over (layers x blocks).
+
+Stats/factors are maintained only for leaves selected by
+``eligible_paths`` (attention + MLP projection matrices); everything else
+falls back to plain AdamW.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import PrecisionConfig
+from repro.core.tree import tree_potrf, tree_trsm_left
+from repro.optim import adamw
+
+ELIGIBLE = re.compile(
+    r"(mlp/(w_in|w_gate|w_out)|attn/(wq|wk|wv|wo)|ck|cv|w_out|w_in)$")
+
+
+@dataclasses.dataclass(frozen=True)
+class TreeNewtonConfig:
+    adam: adamw.AdamWConfig = dataclasses.field(
+        default_factory=adamw.AdamWConfig)
+    precision: PrecisionConfig = dataclasses.field(
+        default_factory=lambda: PrecisionConfig(levels=("bf16", "f32"),
+                                                leaf=128))
+    block: int = 512            # Shampoo block size (multiple of leaf)
+    stats_every: int = 1
+    factor_every: int = 10
+    damping: float = 1e-3
+    ema: float = 0.95
+    max_side: int = 32768       # skip matrices with larger fan-in
+
+
+def _path_str(path):
+    parts = []
+    for p in path:
+        parts.append(str(getattr(p, "key", getattr(p, "idx", p))))
+    return "/".join(parts)
+
+
+def _eligible(path, leaf, cfg: TreeNewtonConfig):
+    if leaf.ndim not in (2, 3):
+        return False
+    din = leaf.shape[-2]
+    if din % cfg.block != 0 or din > cfg.max_side:
+        return False
+    return bool(ELIGIBLE.search(_path_str(path)))
+
+
+def _to_blocks(g, block):
+    """[..., din, dout] -> [..., nb, block, dout]"""
+    *lead, din, dout = g.shape
+    return g.reshape(*lead, din // block, block, dout)
+
+
+def init(params, cfg: TreeNewtonConfig):
+    adam_state = adamw.init(params, cfg.adam)
+
+    def stat_init(path, leaf):
+        if not _eligible(path, leaf, cfg):
+            return None
+        *lead, din, dout = leaf.shape
+        nb = din // cfg.block
+        eye = jnp.eye(cfg.block, dtype=jnp.float32)
+        shape = (*lead, nb, cfg.block, cfg.block)
+        return jnp.broadcast_to(eye, shape)
+
+    stats = jax.tree_util.tree_map_with_path(stat_init, params)
+    factors = jax.tree.map(lambda s: s, stats)   # chol(I) = I
+    return {"adam": adam_state, "stats": stats, "factors": factors,
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def _update_stats(g, a, cfg: TreeNewtonConfig):
+    gb = _to_blocks(g.astype(jnp.float32), cfg.block)
+    gg = jnp.einsum("...io,...jo->...ij", gb, gb) / gb.shape[-1]
+    return cfg.ema * a + (1 - cfg.ema) * gg
+
+
+def _refactor(a, cfg: TreeNewtonConfig):
+    """vmap tree-POTRF over (layers x blocks) of damped stats."""
+    n = a.shape[-1]
+    tr = jnp.trace(a, axis1=-2, axis2=-1)[..., None, None] / n
+    damped = a + (cfg.damping * tr + 1e-12) * jnp.eye(n, dtype=a.dtype)
+    flat = damped.reshape(-1, n, n)
+    chol = jax.vmap(lambda m: tree_potrf(m, cfg.precision))(flat)
+    return chol.reshape(a.shape)
+
+
+def _whiten(g, l, cfg: TreeNewtonConfig):
+    """Solve (L L^T) X = G per block via two tree solves; keep grafted
+    AdamW magnitude (per-matrix norm)."""
+    gb = _to_blocks(g.astype(jnp.float32), cfg.block)
+    shape = gb.shape
+    n, dout = shape[-2], shape[-1]
+    gf = gb.reshape(-1, n, dout)
+    lf = l.reshape(-1, n, n)
+
+    def solve(li, gi):
+        y = tree_trsm_left(gi, li, cfg.precision, trans=False)
+        return tree_trsm_left(y, li, cfg.precision, trans=True)
+
+    x = jax.vmap(solve)(lf, gf).reshape(shape)
+    x = x.reshape(g.shape)
+    # graft: rescale to the raw gradient's norm per matrix
+    axes = tuple(range(g.ndim - 2, g.ndim))
+    gn = jnp.sqrt(jnp.sum(jnp.square(g.astype(jnp.float32)), axis=axes,
+                          keepdims=True))
+    xn = jnp.sqrt(jnp.sum(jnp.square(x), axis=axes, keepdims=True))
+    return x * (gn / jnp.maximum(xn, 1e-12))
+
+
+def apply(grads, state, params, cfg: TreeNewtonConfig):
+    """Precondition eligible gradients, then AdamW on the result."""
+    count = state["count"] + 1
+
+    def maybe_stats(path, a, g):
+        if a is None:
+            return None
+        return jax.lax.cond(count % cfg.stats_every == 0,
+                            lambda: _update_stats(g, a, cfg), lambda: a)
+
+    stats = jax.tree_util.tree_map_with_path(
+        maybe_stats, state["stats"], grads, is_leaf=lambda x: x is None)
+
+    def maybe_factor(a, l):
+        if a is None:
+            return None
+        return jax.lax.cond(count % cfg.factor_every == 0,
+                            lambda: _refactor(a, cfg), lambda: l)
+
+    factors = jax.tree.map(maybe_factor, stats, state["factors"],
+                           is_leaf=lambda x: x is None)
+
+    def precond(l, g):
+        if l is None:
+            return g
+        return _whiten(g, l, cfg)
+
+    pgrads = jax.tree.map(precond, factors, grads,
+                          is_leaf=lambda x: x is None)
+    new_params, adam_state, metrics = adamw.apply(
+        pgrads, state["adam"], params, cfg.adam)
+    new_state = {"adam": adam_state, "stats": stats, "factors": factors,
+                 "count": count}
+    return new_params, new_state, metrics

@@ -1,0 +1,1 @@
+from repro.serve.engine import generate, prefill_step, serve_step  # noqa: F401

@@ -1,0 +1,76 @@
+"""Serving engine: batched prefill + decode with sharded caches.
+
+``prefill_step`` / ``serve_step`` are the two functions the decode_* and
+long_* dry-run cells lower (assignment: decode shapes lower serve_step —
+one new token against a seq_len KV cache — not train_step).
+
+``generate`` is the host-side loop used by examples/serve.py: prefill a
+prompt batch, then greedy/temperature decode with a step-jitted
+serve_step. Continuous batching at cluster scale would slot new requests
+into free cache rows between steps; the cache layout (batch-major,
+position-indexed) is chosen so that insertion is a dynamic_update_slice
+per row (documented seam, not exercised here).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.common import ModelConfig, NO_SHARD, Sharder
+
+
+def prefill_step(params, batch, cfg: ModelConfig,
+                 sharder: Sharder = NO_SHARD):
+    """Full-sequence forward; returns (last_logits, caches)."""
+    logits, _, caches = T.forward(params, batch, cfg, sharder,
+                                  mode="prefill", last_only=True)
+    return logits[:, -1], caches
+
+
+def serve_step(params, caches, tokens, pos, cfg: ModelConfig,
+               sharder: Sharder = NO_SHARD, extra=None):
+    """One decode step. tokens: [B, 1] (audio: [B, 1, n_codebooks]);
+    pos: scalar int32 absolute position. Returns (logits, new_caches)."""
+    batch = {"tokens": tokens}
+    if extra:
+        batch.update(extra)
+    logits, _, caches = T.forward(params, batch, cfg, sharder,
+                                  mode="decode", caches=caches, pos=pos)
+    return logits[:, 0], caches
+
+
+def generate(params, prompt_batch, cfg: ModelConfig, *, n_tokens: int,
+             sharder: Sharder = NO_SHARD, temperature: float = 0.0,
+             rng=None, max_len: int | None = None):
+    """Greedy / sampled generation (host loop, jitted step)."""
+    S = prompt_batch["tokens"].shape[1]
+    max_len = max_len or (S + n_tokens)
+    last, caches = prefill_step(params, prompt_batch, cfg, sharder)
+    caches = T.pad_caches(caches, max_len)
+
+    step = jax.jit(functools.partial(serve_step, cfg=cfg, sharder=sharder))
+
+    outs = []
+    tok = _pick(last, cfg, temperature, rng, 0)
+    outs.append(tok)
+    for i in range(1, n_tokens):
+        logits, caches = step(params, caches, tok, jnp.int32(S + i - 1))
+        tok = _pick(logits, cfg, temperature, rng, i)
+        outs.append(tok)
+    return jnp.concatenate(outs, axis=1)
+
+
+def _pick(logits, cfg: ModelConfig, temperature, rng, i):
+    """logits: [B, V] (audio: [B, n_cb, V]) -> next token [B, 1, ...]."""
+    if temperature > 0:
+        assert rng is not None
+        k = jax.random.fold_in(rng, i)
+        tok = jax.random.categorical(k, logits / temperature, axis=-1)
+    else:
+        tok = jnp.argmax(logits, axis=-1)
+    if cfg.family == "audio":
+        return tok[:, None, :]          # [B, 1, n_cb]
+    return tok[:, None]

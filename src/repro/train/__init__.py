@@ -1,0 +1,3 @@
+from repro.train.step import (TrainConfig, init_state,  # noqa: F401
+                              make_train_step, reshape_for_accum)
+from repro.train import compress  # noqa: F401

@@ -1,0 +1,45 @@
+"""int8 error-feedback gradient all-reduce (shard_map collective).
+
+The paper's per-block quantizer (repro.core.quantize) reused for the
+distributed-training side: cross-replica gradient reduction in int8 with
+an error-feedback residual, the standard compressed-DDP trick. At pod
+scale this is applied on the *inter-pod* stage of a hierarchical
+all-reduce where links are slowest (DESIGN.md §4.6).
+
+ef_allreduce_mean is a per-shard function meant to run inside shard_map
+over the reduction axis; tests/test_train.py runs a full mini data-
+parallel trainer with it on 8 host devices and shows convergence matches
+the uncompressed baseline.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize import dequant_int8, quant_int8
+
+
+def ef_allreduce_mean(grad, residual, axis: str):
+    """Compressed mean-all-reduce with error feedback.
+
+    grad, residual: local f32 pytree leaves (same shapes).
+    Returns (reduced_grad, new_residual).
+    """
+    def one(g, r):
+        g32 = g.astype(jnp.float32) + r
+        q, scale = quant_int8(g32)
+        sent = dequant_int8(q, scale)
+        new_r = g32 - sent                       # what int8 couldn't carry
+        total = jax.lax.pmean(sent, axis)
+        return total, new_r
+
+    flat_g, tdef = jax.tree.flatten(grad)
+    flat_r = tdef.flatten_up_to(residual)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return tdef.unflatten([o[0] for o in out]), \
+        tdef.unflatten([o[1] for o in out])
+
+
+def init_residual(params):
+    return jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)

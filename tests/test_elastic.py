@@ -1,0 +1,80 @@
+"""Elastic fault-tolerance: a checkpoint written under one mesh resumes
+bit-exactly under a different device count (8 -> 4 -> 1) — the node-
+failure / rescale story from DESIGN.md §4.7. Needs 8 host devices (run
+via tests/test_multidevice.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+from repro.data import SyntheticLM
+from repro.launch import sharding as SH
+from repro.models.common import ModelConfig
+from repro.optim import AdamWConfig
+from repro.train import TrainConfig, init_state, make_train_step
+
+needs8 = pytest.mark.skipif(jax.device_count() < 8,
+                            reason="needs 8 host devices")
+
+CFG = ModelConfig(name="tiny", family="dense", n_layers=2, d_model=64,
+                  d_ff=128, vocab=128, n_heads=4, n_kv=2, mlp="swiglu",
+                  max_seq=32, remat=False)
+TCFG = TrainConfig(adam=AdamWConfig(lr=1e-2, warmup=0, total_steps=50))
+
+
+def _mesh(data, model):
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def _state_shardings(state, mesh):
+    p_shapes = jax.eval_shape(lambda s: s, state)["params"]
+    p_sh = SH.param_shardings(p_shapes, CFG, mesh)
+    o_sh = SH.opt_state_shardings(
+        jax.eval_shape(lambda s: s, state)["opt"], p_sh, mesh)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    return {"params": p_sh, "opt": o_sh,
+            "step": NamedSharding(mesh, P())}
+
+
+@needs8
+def test_elastic_resume_across_meshes(tmp_path):
+    data = SyntheticLM(CFG.vocab, batch=8, seq=16, seed=0)
+
+    # train 3 steps on an 8-device (4,2) mesh, checkpoint
+    mesh8 = _mesh(4, 2)
+    sharder8 = SH.make_sharder(mesh8, multi_pod=False, batch=8)
+    state = init_state(jax.random.PRNGKey(0), CFG, TCFG)
+    with mesh8:
+        step8 = jax.jit(make_train_step(CFG, TCFG, sharder8))
+        for i in range(3):
+            state, _ = step8(state, jax.tree.map(jnp.asarray, data.get(i)))
+    ckpt.save(str(tmp_path), 3, state, blocking=True)
+
+    # continue 2 steps on 8 devices (reference trajectory)
+    ref = state
+    with mesh8:
+        for i in range(3, 5):
+            ref, mref = step8(ref, jax.tree.map(jnp.asarray, data.get(i)))
+
+    # resume on a 4-device (2,2) mesh and on a single device
+    for dm in [(2, 2), (1, 1)]:
+        mesh = _mesh(*dm)
+        sharder = SH.make_sharder(mesh, multi_pod=False, batch=8)
+        template = init_state(jax.random.PRNGKey(0), CFG, TCFG)
+        shardings = _state_shardings(template, mesh)
+        with mesh:
+            restored, s0 = ckpt.restore(str(tmp_path), template,
+                                        shardings=shardings)
+            assert s0 == 3
+            step = jax.jit(make_train_step(CFG, TCFG, sharder))
+            for i in range(3, 5):
+                restored, m = step(restored,
+                                   jax.tree.map(jnp.asarray, data.get(i)))
+        assert abs(float(m["loss"]) - float(mref["loss"])) < 1e-4, dm
+        # ref/restored live on different meshes: compare on host
+        d = max(float(np.abs(np.asarray(a) - np.asarray(b)).max())
+                for a, b in zip(jax.tree.leaves(ref["params"]),
+                                jax.tree.leaves(restored["params"])))
+        assert d < 1e-4, (dm, d)

@@ -1,0 +1,64 @@
+"""Flash-attention Pallas kernel vs the scan-based oracle
+(models/attention._chunked_causal) and a naive softmax reference."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash import flash_attention, flash_attention_bshd
+
+RNG = np.random.default_rng(11)
+
+
+def naive_causal(q, k, v):
+    """q: [H,S,hd]; k/v: [KV,T,hd]."""
+    H, S, hd = q.shape
+    KV = k.shape[0]
+    G = H // KV
+    kr = jnp.repeat(k, G, axis=0)
+    vr = jnp.repeat(v, G, axis=0)
+    s = jnp.einsum("hsd,htd->hst", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) * hd ** -0.5
+    T = k.shape[1]
+    mask = jnp.arange(S)[:, None] >= jnp.arange(T)[None, :]
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("hst,htd->hsd", p, vr.astype(jnp.float32))
+
+
+@pytest.mark.parametrize("H,KV,S,hd", [(4, 4, 256, 64), (8, 2, 256, 128),
+                                       (4, 1, 300, 64), (2, 2, 512, 32)])
+def test_flash_matches_naive(H, KV, S, hd):
+    q = jnp.asarray(RNG.standard_normal((H, S, hd)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((KV, S, hd)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((KV, S, hd)), jnp.float32)
+    got = flash_attention(q, k, v, bq=128, bk=128, interpret=True)
+    want = naive_causal(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_bf16():
+    q = jnp.asarray(RNG.standard_normal((4, 256, 64)), jnp.bfloat16)
+    k = jnp.asarray(RNG.standard_normal((2, 256, 64)), jnp.bfloat16)
+    v = jnp.asarray(RNG.standard_normal((2, 256, 64)), jnp.bfloat16)
+    got = flash_attention(q, k, v, bq=128, bk=128, interpret=True)
+    want = naive_causal(q.astype(jnp.float32), k.astype(jnp.float32),
+                        v.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want), rtol=2e-2, atol=2e-2)
+
+
+def test_flash_matches_model_oracle():
+    """Against the scan-based online-softmax the models actually use."""
+    from repro.models.attention import _chunked_causal
+    B, S, KV, G, hd = 2, 256, 2, 2, 64
+    q = jnp.asarray(RNG.standard_normal((B, S, KV, G, hd)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, S, KV, hd)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, S, KV, hd)), jnp.float32)
+    want = _chunked_causal(q, k, v, q_pos0=0, chunk=128)   # [B,S,KV,G,hd]
+    qf = q.reshape(B, S, KV * G, hd)
+    got = flash_attention_bshd(qf, k, v, bq=128, bk=128, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want.reshape(B, S, KV * G, hd)),
+        rtol=2e-4, atol=2e-4)

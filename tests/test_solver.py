@@ -1,0 +1,206 @@
+"""Core solver tests: correctness, precision-ladder properties (paper
+Fig. 8 ordering), quantization invariants — including hypothesis
+property-based tests on the system's invariants."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.core as core
+
+RNG = np.random.default_rng(7)
+
+
+def spd(n, dtype=np.float32, scale=1.0, seed=None):
+    rng = np.random.default_rng(seed) if seed is not None else RNG
+    m = rng.uniform(-1, 1, (n, n))
+    a = (m @ m.T + n * np.eye(n)) * scale
+    return a.astype(dtype)
+
+
+F32 = core.PrecisionConfig(levels=("f32",), leaf=128)
+
+
+@pytest.mark.parametrize("n", [64, 128, 256, 300, 512, 1000])
+def test_potrf_matches_lapack(n):
+    a = spd(n)
+    l = np.asarray(core.cholesky(a, F32), np.float64)
+    ref = np.linalg.cholesky(a.astype(np.float64))
+    rel = np.abs(l - ref).max() / np.abs(ref).max()
+    assert rel < 5e-5, rel
+
+
+@pytest.mark.parametrize("leaf", [128, 256, 512])
+def test_leaf_size_invariance(leaf):
+    a = spd(1024)
+    cfg = core.PrecisionConfig(levels=("f32",), leaf=leaf)
+    l = np.asarray(core.cholesky(a, cfg), np.float64)
+    ref = np.linalg.cholesky(a.astype(np.float64))
+    assert np.abs(l - ref).max() / np.abs(ref).max() < 5e-5
+
+
+@pytest.mark.parametrize("nrhs", [1, 3, 64])
+def test_solve(nrhs):
+    n = 640
+    a = spd(n)
+    x_true = RNG.standard_normal((n, nrhs)).astype(np.float32)
+    b = a @ x_true
+    x = np.asarray(core.cholesky_solve(a, b, F32))
+    assert np.abs(x - x_true).max() / np.abs(x_true).max() < 1e-4
+
+
+def test_solve_vector_shape():
+    n = 256
+    a = spd(n)
+    b = RNG.standard_normal(n).astype(np.float32)
+    x = core.cholesky_solve(a, b, F32)
+    assert x.shape == (n,)
+    assert np.abs(np.asarray(a @ x - b)).max() < 1e-2
+
+
+def test_precision_ladder_ordering():
+    """Paper Fig. 8: accuracy must degrade monotonically (within noise)
+    as more recursion levels drop to f16, and every mixed config must
+    beat pure f16."""
+    a = spd(1024, seed=3)
+    ref = np.linalg.cholesky(a.astype(np.float64))
+
+    def err(levels):
+        cfg = core.PrecisionConfig(levels=levels, leaf=128)
+        l = np.asarray(core.cholesky(a, cfg), np.float64)
+        return np.abs(l - ref).max() / np.abs(ref).max()
+
+    e_f32 = err(("f32",))
+    e_1 = err(("f16", "f32"))
+    e_3 = err(("f16", "f16", "f16", "f32"))
+    e_f16 = err(("f16",))
+    assert e_f32 < e_1 < e_3 * 1.5
+    assert e_3 <= e_f16 * 1.5
+    assert e_1 < e_f16 / 5, (e_1, e_f16)
+
+
+def test_int8_ladder_level():
+    """Beyond-paper int8 level: always-scaled per-block quantization on
+    the integer MXU path. ~3 digits, finite, and the factor reconstructs
+    to int8-grid tolerance."""
+    a = spd(1024, seed=9)
+    ref = np.linalg.cholesky(a.astype(np.float64))
+    cfg = core.PrecisionConfig(levels=("int8", "f32"), leaf=128)
+    l = np.asarray(core.cholesky(a, cfg), np.float64)
+    assert np.isfinite(l).all()
+    err = np.linalg.norm(l - ref) / np.linalg.norm(ref)
+    assert err < 5e-3, err          # >= ~2.3 digits
+    # int8 quant roundtrip invariant
+    xq, alpha = core.quant_block(jnp.asarray(a[:64, :64]), "int8", True)
+    back = np.asarray(xq, np.float64) * float(alpha)
+    assert np.abs(back - a[:64, :64]).max() <= float(alpha) * 0.5 + 1e-6
+
+
+def test_quantization_prevents_overflow():
+    a = spd(512, scale=1e6, seed=4)
+    cfg_q = core.PrecisionConfig(levels=("f16", "f32"), leaf=128,
+                                 quantize=True)
+    cfg_n = core.PrecisionConfig(levels=("f16", "f32"), leaf=128,
+                                 quantize=False)
+    lq = np.asarray(core.cholesky(a, cfg_q))
+    ln = np.asarray(core.cholesky(a, cfg_n))
+    assert np.isfinite(lq).all()
+    assert not np.isfinite(ln).all()   # overflow without the paper's fix
+    ref = np.linalg.cholesky(a.astype(np.float64))
+    assert np.abs(lq - ref).max() / np.abs(ref).max() < 1e-3
+
+
+def test_tree_syrk_vs_dense():
+    n, k = 512, 320
+    c = RNG.standard_normal((n, n)).astype(np.float32)
+    a = RNG.standard_normal((n, k)).astype(np.float32)
+    got = np.asarray(core.tree_syrk(jnp.asarray(c), jnp.asarray(a),
+                                    alpha=-2.0, beta=0.5, cfg=F32))
+    want = np.tril(0.5 * c - 2.0 * (a @ a.T))
+    np.testing.assert_allclose(np.tril(got), want, rtol=1e-4, atol=1e-3)
+
+
+def test_tree_trsm_vs_scipy():
+    import scipy.linalg as sla
+    n, m = 512, 384
+    l = np.tril(RNG.standard_normal((n, n))).astype(np.float32)
+    l[np.diag_indices(n)] += np.sqrt(n) * 4
+    b = RNG.standard_normal((m, n)).astype(np.float32)
+    got = np.asarray(core.tree_trsm(jnp.asarray(b), jnp.asarray(l), F32))
+    want = sla.solve_triangular(l.astype(np.float64),
+                                b.T.astype(np.float64), lower=True).T
+    assert np.abs(got - want).max() / np.abs(want).max() < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property tests
+# ---------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(2, 12), scale=st.floats(1e-3, 1e3),
+       seed=st.integers(0, 2**31 - 1))
+def test_property_factor_reconstructs(n, scale, seed):
+    """L L^T == A for any well-conditioned SPD input, any size (padding
+    path included), any scale."""
+    n = n * 32  # 64..384, exercises pad + leaf paths
+    a = spd(n, scale=scale, seed=seed)
+    l = np.asarray(core.cholesky(a, F32), np.float64)
+    rec = l @ l.T
+    rel = np.abs(rec - a).max() / np.abs(a).max()
+    assert rel < 1e-4, rel
+    # lower-triangularity invariant
+    assert np.abs(np.triu(l, 1)).max() == 0.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       exp=st.integers(-6, 6))
+def test_property_quantization_roundtrip(seed, exp):
+    """quant/dequant is a contraction: |deq(q(x)) - x| <= f16 eps * alpha
+    and alpha >= 1 with equality iff in range."""
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal((64, 64)) * 10.0 ** exp).astype(np.float32)
+    xq, alpha = core.quant_block(jnp.asarray(x), "f16", True)
+    back = np.asarray(xq, np.float32) * float(alpha)
+    amax = np.abs(x).max()
+    assert float(alpha) >= 1.0
+    if amax <= 65504:
+        assert float(alpha) == 1.0
+    tol = max(amax, 1.0) * 1e-3
+    assert np.abs(back - x).max() <= tol
+    assert np.isfinite(np.asarray(xq, np.float32)).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_property_solve_residual(seed):
+    """||A x - b|| / ||b|| small for the mixed bf16 ladder (the TPU
+    default) on random SPD systems."""
+    rng = np.random.default_rng(seed)
+    n = 256
+    a = spd(n, seed=seed)
+    b = rng.standard_normal((n, 2)).astype(np.float32)
+    cfg = core.PrecisionConfig(levels=("bf16", "f32"), leaf=128)
+    x = np.asarray(core.cholesky_solve(a, b, cfg), np.float64)
+    res = np.abs(a @ x - b).max() / np.abs(b).max()
+    assert res < 5e-2, res
+
+
+def test_census_flop_exactness():
+    """Census total must equal n^3/3 + O(n^2) for any leaf/level mix."""
+    for n in (1024, 4096):
+        for cfg in (F32, core.PrecisionConfig(levels=("f16",) * 3 + ("f32",),
+                                              leaf=256)):
+            cen = core.census_potrf(n, cfg)
+            assert abs(cen.total_flops - n ** 3 / 3) / (n ** 3 / 3) < 0.02
+
+
+def test_census_depth_monotone():
+    """Deeper recursion (bigger n) => higher low-precision fraction —
+    the paper's Fig. 10 mechanism."""
+    cfg = core.PrecisionConfig(levels=("f16",) * 5 + ("f32",), leaf=256)
+    fracs = [core.census_potrf(n, cfg).lowp_fraction()
+             for n in (512, 2048, 8192, 32768)]
+    assert all(a < b for a, b in zip(fracs, fracs[1:])), fracs

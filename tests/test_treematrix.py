@@ -1,0 +1,67 @@
+"""TreeSPD packed-storage tests: round trip, pytree-ness, packed
+factorization == dense-API factorization, storage-ratio accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core as core
+from repro.core.treematrix import TreeSPD, storage_ratio, tree_potrf_packed
+
+RNG = np.random.default_rng(5)
+
+
+def spd(n):
+    m = RNG.uniform(-1, 1, (n, n))
+    return (m @ m.T + n * np.eye(n)).astype(np.float32)
+
+
+CFG = core.PrecisionConfig(levels=("f16", "f16", "f32"), leaf=128)
+
+
+def test_roundtrip_matches_storage_rounding():
+    a = spd(512)
+    t = TreeSPD.from_dense(jnp.asarray(a), CFG)
+    back = np.asarray(t.to_dense())
+    # lower triangle reproduces a to f16-storage tolerance
+    il = np.tril_indices(512, -1)
+    assert np.abs(back[il] - a[il]).max() / np.abs(a).max() < 2e-3
+    # diagonal leaf tiles are exact (high precision)
+    assert np.abs(np.diag(back) - np.diag(a)).max() == 0.0
+
+
+def test_is_pytree_and_jits():
+    a = spd(256)
+    t = TreeSPD.from_dense(jnp.asarray(a), CFG)
+    leaves = jax.tree.leaves(t)
+    assert any(l.dtype == jnp.float16 for l in leaves)
+
+    @jax.jit
+    def dense_of(t):
+        return t.to_dense()
+
+    np.testing.assert_allclose(np.asarray(dense_of(t)),
+                               np.asarray(t.to_dense()))
+
+
+def test_packed_factorization_matches_dense_api():
+    a = spd(512)
+    t = TreeSPD.from_dense(jnp.asarray(a), CFG)
+    lp = tree_potrf_packed(t, CFG)
+    l_packed = np.asarray(lp.to_dense(), np.float64)
+    ref = np.linalg.cholesky(a.astype(np.float64))
+    rel = np.abs(np.tril(l_packed) - ref).max() / np.abs(ref).max()
+    assert rel < 5e-3, rel          # f16-ladder accuracy
+
+
+def test_storage_ratio():
+    cfg = core.PrecisionConfig(levels=("f16", "f16", "f32"), leaf=256)
+    r = storage_ratio(65536, cfg)
+    # analytic: n^2(1/4*2 + 1/8*2 + 1/8*4)B / 4n^2 B = 0.3125
+    assert 0.29 < r < 0.34, r
+    r8 = storage_ratio(65536, core.PrecisionConfig(
+        levels=("int8", "int8", "f32"), leaf=256))
+    assert 0.19 < r8 < 0.26, r8
+    t = TreeSPD.from_dense(jnp.asarray(spd(512)),
+                           core.PrecisionConfig(levels=("f16", "f32"),
+                                                leaf=128))
+    assert t.nbytes() < 512 * 512 * 4   # beats dense f32
