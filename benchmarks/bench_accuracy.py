@@ -71,4 +71,5 @@ def run(sizes=(1024, 2048)):
 
 
 if __name__ == "__main__":
-    run()
+    from benchmarks.util import smoke_mode
+    run(sizes=(256,) if smoke_mode() else (1024, 2048))

@@ -12,7 +12,6 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.util import emit, model_time_s, spd_matrix, timeit
 from repro.core import PrecisionConfig, census_potrf, cholesky

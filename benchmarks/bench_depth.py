@@ -12,7 +12,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import numpy as np
 
 from benchmarks.util import emit, model_time_s, spd_matrix, timeit
 from repro.core import PrecisionConfig, census_potrf, cholesky

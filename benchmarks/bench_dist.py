@@ -17,14 +17,14 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from benchmarks.util import emit, spd_matrix, timeit
 from repro.core import PrecisionConfig, cholesky
 from repro.core.distributed import dist_cholesky
+from repro.launch.mesh import make_mesh
 
 
 def run(sizes=(1024, 2048)):
     if jax.device_count() < 8:
         emit("dist_cholesky", 0.0, "skipped=needs_8_devices")
         return
-    mesh = jax.make_mesh((8,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((8,), ("model",))
     cfg = PrecisionConfig(levels=("f32",), leaf=128)
     for n in sizes:
         a = spd_matrix(n)
@@ -44,4 +44,5 @@ def run(sizes=(1024, 2048)):
 
 
 if __name__ == "__main__":
-    run()
+    from benchmarks.util import smoke_mode
+    run(sizes=(1024,) if smoke_mode() else (1024, 2048))  # 8 shards x leaf 128

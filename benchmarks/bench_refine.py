@@ -1,0 +1,92 @@
+"""Iterative-refinement benchmark: digits recovered per sweep and
+time-to-tolerance for every PAPER_CONFIGS ladder.
+
+For each ladder this measures
+  * the one-off factorization time (the O(n^3) part the ladder makes
+    cheap),
+  * the per-sweep IR cost (two tree-TRSMs + residual GEMM, O(n^2)),
+  * digits of relative residual before refinement, after refinement,
+    and the digits-recovered-per-sweep rate,
+  * time-to-tolerance: wall time of the jitted refine loop.
+
+Run under JAX_ENABLE_X64=1 (run.py does this via subprocess) so the
+residual precision is f64 and the tolerance target is meaningful;
+without x64 the target degrades to the f32 floor automatically.
+
+Smoke mode (REPRO_BENCH_SMOKE=1 or run.py --smoke) shrinks sizes so the
+CI bench job finishes in seconds.
+"""
+from __future__ import annotations
+
+import functools
+import os
+import sys
+
+import jax
+import numpy as np
+
+# allow `python benchmarks/bench_refine.py` (script dir shadows the root)
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
+
+from benchmarks.util import emit, spd_matrix, timeit  # noqa: E402
+from repro.core import (PAPER_CONFIGS, RefineConfig, cholesky,  # noqa: E402
+                        iterative_refine)
+
+#: ladders benchmarked; f64 entries need x64, int8 rides the integer path
+SKIP = ("pure_f64",)  # identical to the reference — nothing to refine
+
+
+def _tol():
+    return 1e-10 if jax.config.jax_enable_x64 else 1e-6
+
+
+def _digits(relres: float) -> float:
+    return -np.log10(max(float(relres), 1e-17))
+
+
+def run(sizes=(1024, 2048), methods=("ir", "gmres")):
+    tol = _tol()
+    for n in sizes:
+        a = spd_matrix(
+            n, dtype=np.float64 if jax.config.jax_enable_x64
+            else np.float32)
+        b = a @ np.random.default_rng(0).standard_normal(n).astype(a.dtype)
+        for name, cfg in PAPER_CONFIGS.items():
+            if name in SKIP:
+                continue
+            if cfg.high_name == "f64" and not jax.config.jax_enable_x64:
+                continue
+            fac = jax.jit(functools.partial(cholesky, cfg=cfg))
+            t_factor = timeit(fac, a.astype(np.float32)
+                              if cfg.high_name != "f64" else a)
+            for method in methods:
+                rcfg = RefineConfig(max_sweeps=5, tol=tol, method=method,
+                                    gmres_restart=8)
+                fn = jax.jit(functools.partial(
+                    iterative_refine, cfg=cfg, refine=rcfg))
+                res = fn(a, b)
+                t_refine = timeit(fn, a, b)
+                hist = np.asarray(res.history, np.float64)
+                sweeps = int(res.iterations)
+                d0, d1 = _digits(hist[0]), _digits(res.residual)
+                rate = (d1 - d0) / max(sweeps, 1)
+                emit(f"refine_{method}_{name}_n{n}", t_refine,
+                     f"digits0={d0:.2f};digits={d1:.2f};sweeps={sweeps};"
+                     f"digits_per_sweep={rate:.2f};"
+                     f"converged={bool(res.converged)};"
+                     f"factor_us={t_factor:.1f};tol={tol:g}")
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes, IR only (CI)")
+    args = ap.parse_args()
+    if args.smoke or os.environ.get("REPRO_BENCH_SMOKE") == "1":
+        run(sizes=(256,), methods=("ir",))
+    else:
+        run()

@@ -6,18 +6,47 @@ Prints ``name,us_per_call,derived`` CSV (assignment contract).
   bench_trsm         Fig. 5   recursive TRSM speedup
   bench_cholesky     Fig. 6/7 Cholesky throughput + speedup
   bench_accuracy     Fig. 8   precision-ladder digits (x64 subprocess)
+  bench_refine       beyond-paper IR digits/sweep (x64 subprocess)
   bench_depth        Fig. 10  size/depth scaling
   bench_portability  Fig. 9/11 backend dispatch agreement
   bench_dist         beyond-paper multi-chip solver (8-dev subprocess)
 
-Accuracy and distributed benches need different process-level settings
-(x64 / forced device count), so run.py re-execs them as subprocesses.
+Accuracy, refinement and distributed benches need different
+process-level settings (x64 / forced device count), so run.py re-execs
+them as subprocesses.
+
+``--smoke`` shrinks every bench to CI-sized problems (propagated to
+subprocesses via REPRO_BENCH_SMOKE=1); ``--out results.json`` writes all
+rows as a JSON artifact so CI tracks the perf trajectory per PR.
 """
 from __future__ import annotations
 
+import argparse
+import contextlib
+import io
+import json
 import os
 import subprocess
 import sys
+
+# allow `python benchmarks/run.py` (script dir shadows the repo root)
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
+
+
+def _parse_rows(text: str):
+    rows = []
+    for line in text.splitlines():
+        parts = line.strip().split(",", 2)
+        if len(parts) == 3 and parts[0] != "name":
+            try:
+                us = float(parts[1])
+            except ValueError:
+                continue
+            rows.append({"name": parts[0], "us_per_call": us,
+                         "derived": parts[2]})
+    return rows
 
 
 def _sub(module: str, env_extra: dict):
@@ -27,29 +56,67 @@ def _sub(module: str, env_extra: dict):
     r = subprocess.run([sys.executable, "-m", module], env=env,
                        capture_output=True, text=True, timeout=3000)
     sys.stdout.write(r.stdout)
+    rows = _parse_rows(r.stdout)
     if r.returncode != 0:
+        # the failure marker must reach the JSON artifact too, so a
+        # crashed bench reads as FAILED rather than silently-absent rows
         sys.stdout.write(f"{module},0.0,FAILED\n")
         sys.stderr.write(r.stderr[-2000:])
+        rows.append({"name": module, "us_per_call": 0.0,
+                     "derived": "FAILED"})
+    return rows
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny problem sizes (CI benchmark-smoke job)")
+    ap.add_argument("--out", default=None, metavar="PATH",
+                    help="write all rows as a JSON artifact")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+
     print("name,us_per_call,derived")
     from benchmarks import (bench_cholesky, bench_depth, bench_portability,
-                            bench_syrk, bench_trsm)
-    bench_syrk.run()
-    bench_trsm.run()
-    bench_cholesky.run()
-    bench_depth.run()
-    bench_portability.run()
-    _sub("benchmarks.bench_accuracy", {"JAX_ENABLE_X64": "1"})
-    _sub("benchmarks.bench_dist",
-         {"XLA_FLAGS": "--xla_force_host_platform_device_count=8"})
-    # roofline table (reads experiments/dryrun if present)
+                            bench_syrk, bench_trsm, util)
+    if args.smoke:
+        bench_syrk.run(sizes=(256,))
+        bench_trsm.run(sizes=(256,))
+        bench_cholesky.run(sizes=(256,))
+        bench_depth.run(sizes=(256, 1024, 4096))
+        bench_portability.run(sizes=(256,))
+    else:
+        bench_syrk.run()
+        bench_trsm.run()
+        bench_cholesky.run()
+        bench_depth.run()
+        bench_portability.run()
+    sub_rows = _sub("benchmarks.bench_accuracy", {"JAX_ENABLE_X64": "1"})
+    sub_rows += _sub("benchmarks.bench_refine", {"JAX_ENABLE_X64": "1"})
+    sub_rows += _sub(
+        "benchmarks.bench_dist",
+        {"XLA_FLAGS": "--xla_force_host_platform_device_count=8"})
+    # roofline table (reads experiments/dryrun if present); it prints
+    # rows directly, so tee its stdout into the artifact rows as well
     try:
         from benchmarks import roofline
-        roofline.run_csv()
+        buf = io.StringIO()
+        with contextlib.redirect_stdout(buf):
+            roofline.run_csv()
+        sys.stdout.write(buf.getvalue())
+        sub_rows += _parse_rows(buf.getvalue())
     except Exception as e:  # noqa: BLE001
         print(f"roofline,0.0,unavailable({type(e).__name__})")
+        sub_rows.append({"name": "roofline", "us_per_call": 0.0,
+                         "derived": f"unavailable({type(e).__name__})"})
+
+    if args.out:
+        payload = {"smoke": args.smoke, "rows": list(util.ROWS) + sub_rows}
+        with open(args.out, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"# wrote {len(payload['rows'])} rows to {args.out}",
+              file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -8,6 +8,7 @@ census (repro.core.census) + v5e peaks and are always labelled model_*.
 """
 from __future__ import annotations
 
+import os
 import time
 
 import jax
@@ -16,6 +17,14 @@ import numpy as np
 from repro.core.precision import PEAK_FLOPS
 
 HBM_BW = 819e9          # bytes/s per chip (v5e)
+
+#: rows emitted so far (run.py serializes these as the JSON artifact)
+ROWS: list[dict] = []
+
+
+def smoke_mode() -> bool:
+    """True when run.py --smoke (or CI) asked for tiny benchmark sizes."""
+    return os.environ.get("REPRO_BENCH_SMOKE") == "1"
 
 
 def timeit(fn, *args, warmup=2, iters=5):
@@ -31,6 +40,8 @@ def timeit(fn, *args, warmup=2, iters=5):
 
 
 def emit(name: str, us: float, derived):
+    ROWS.append({"name": name, "us_per_call": round(float(us), 1),
+                 "derived": str(derived)})
     print(f"{name},{us:.1f},{derived}")
 
 

@@ -5,6 +5,7 @@ Public API:
   cholesky, cholesky_solve, logdet    — mixed-precision SPD solver
   tree_potrf, tree_trsm, tree_syrk    — the nested recursive routines
   quant_block / dequant               — per-block quantization
+  refine_solve, RefineConfig, ...     — mixed-precision iterative refinement
   census_*                            — structural FLOP/byte census
   distributed (module)                — shard_map block-panel Cholesky
 """
@@ -12,8 +13,12 @@ from repro.core.precision import (DTYPES, PAPER_CONFIGS, PEAK_FLOPS, RMAX,
                                   PrecisionConfig)
 from repro.core.quantize import (dequant, dequant_int8, quant_block,
                                  quant_int8)
+from repro.core.refine import (RefineConfig, RefineResult, gmres_refine,
+                               iterative_refine, refine_operator,
+                               refine_steps, scaled_solve)
 from repro.core.solve import (cholesky, cholesky_jit, cholesky_solve,
-                              cholesky_solve_jit, logdet, solve_factored)
+                              cholesky_solve_jit, logdet, refine_solve,
+                              solve_factored)
 from repro.core.tree import (pad_spd, tree_potrf, tree_trsm, tree_trsm_left,
                              tree_syrk)
 from repro.core.census import Census, census_potrf, census_syrk, census_trsm
@@ -23,8 +28,10 @@ from repro.core.treematrix import (TreeSPD, storage_ratio,
 __all__ = [
     "DTYPES", "PAPER_CONFIGS", "PEAK_FLOPS", "RMAX", "PrecisionConfig",
     "dequant", "dequant_int8", "quant_block", "quant_int8",
+    "RefineConfig", "RefineResult", "gmres_refine", "iterative_refine",
+    "refine_operator", "refine_steps", "scaled_solve",
     "cholesky", "cholesky_jit", "cholesky_solve", "cholesky_solve_jit",
-    "logdet", "solve_factored",
+    "logdet", "refine_solve", "solve_factored",
     "pad_spd", "tree_potrf", "tree_trsm", "tree_trsm_left", "tree_syrk",
     "Census", "census_potrf", "census_syrk", "census_trsm",
     "TreeSPD", "storage_ratio", "tree_potrf_packed",

@@ -15,7 +15,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 
-from repro.core.precision import DTYPES, PEAK_FLOPS, PrecisionConfig
+from repro.core.precision import PEAK_FLOPS, PrecisionConfig
 
 _BYTES = {"int8": 1, "f16": 2, "bf16": 2, "f32": 4, "f64": 8}
 

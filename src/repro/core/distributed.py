@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.precision import PrecisionConfig
 from repro.core.quantize import quant_block
 from repro.core.tree import tree_potrf, tree_trsm, tree_trsm_left
@@ -112,14 +113,13 @@ def dist_cholesky(a, mesh, cfg: PrecisionConfig | None = None,
                            broadcast_diag_only=broadcast_diag_only,
                            compress_comm=compress_comm)
     spec = P(axis, None)
-    return jax.shard_map(fn, mesh=mesh, in_specs=(spec,), out_specs=spec)(a)
+    return shard_map(fn, mesh=mesh, in_specs=(spec,), out_specs=spec)(a)
 
 
 def _local_solve(l_local, b_local, *, axis: str, nshards: int,
                  cfg: PrecisionConfig):
     """Forward then back substitution on block-row-sharded L and B."""
     w = l_local.shape[0]
-    n = l_local.shape[1]
     my = jax.lax.axis_index(axis)
     nrhs = b_local.shape[1]
 
@@ -176,7 +176,7 @@ def dist_cholesky_solve(a, b, mesh, cfg: PrecisionConfig | None = None,
     if vec:
         b = b[:, None]
     fn = functools.partial(_local_solve, axis=axis, nshards=nshards, cfg=cfg)
-    x = jax.shard_map(fn, mesh=mesh,
+    x = shard_map(fn, mesh=mesh,
                       in_specs=(P(axis, None), P(axis, None)),
                       out_specs=P(axis, None))(l, b)
     return x[:, 0] if vec else x

@@ -19,13 +19,26 @@ def cholesky(a, cfg: PrecisionConfig | None = None):
     return l[:n, :n]
 
 
-def cholesky_solve(a, b, cfg: PrecisionConfig | None = None, *, l=None):
+def cholesky_solve(a, b, cfg: PrecisionConfig | None = None, *, l=None,
+                   refine=None):
     """Solve A x = b for SPD A via L (L^T x) = b with tree solves.
 
     ``b`` may be (n,) or (n, k). Pass a precomputed ``l`` to reuse a
     factorization (the K-FAC optimizer does this across steps).
+
+    ``refine`` (int sweep count or :class:`repro.core.refine.RefineConfig`)
+    runs mixed-precision iterative refinement after the base solve: the
+    factorization stays in the cheap ladder while residuals are formed in
+    the refinement precision, recovering working-precision accuracy.
+    Requires ``a``. Returns just ``x`` (use :func:`refine_solve` for the
+    full :class:`~repro.core.refine.RefineResult`).
     """
     cfg = cfg or PrecisionConfig()
+    if refine is not None:
+        res = refine_solve(a, b, cfg, refine=refine, l=l)
+        x = res.x.astype(b.dtype)
+        return x
+
     vec = b.ndim == 1
     if vec:
         b = b[:, None]
@@ -50,6 +63,18 @@ def cholesky_solve(a, b, cfg: PrecisionConfig | None = None, *, l=None):
 def solve_factored(l, b, cfg: PrecisionConfig | None = None):
     """Two triangular tree-solves with an existing factor (hot K-FAC path)."""
     return cholesky_solve(None, b, cfg, l=l)
+
+
+def refine_solve(a, b, cfg: PrecisionConfig | None = None, *,
+                 refine=None, l=None):
+    """Accuracy-targeted solve: cheap-ladder factorization + iterative
+    refinement. Returns the full :class:`~repro.core.refine.RefineResult`
+    (solution, residual history, sweeps, converged). ``refine`` is an int
+    sweep bound or a :class:`~repro.core.refine.RefineConfig` (choosing
+    classic IR or GMRES-IR); ``None`` means the default 5-sweep IR.
+    """
+    from repro.core import refine as _refine  # circular-import guard
+    return _refine.iterative_refine(a, b, cfg, refine, l=l)
 
 
 def logdet(l):

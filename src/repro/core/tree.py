@@ -181,7 +181,6 @@ def pad_spd(a, leaf: int):
     npad = -(-n // leaf) * leaf
     if npad == n:
         return a, n
-    pad = npad - n
     out = jnp.zeros((npad, npad), a.dtype)
     out = out.at[:n, :n].set(a)
     out = out.at[jnp.arange(n, npad), jnp.arange(n, npad)].set(1.0)

@@ -22,7 +22,7 @@ import jax.numpy as jnp
 
 from repro.core.precision import DTYPES, PrecisionConfig
 from repro.core.quantize import quant_block
-from repro.core.tree import tree_potrf, tree_trsm, tree_syrk, _round_to
+from repro.core.tree import tree_potrf, tree_trsm, tree_syrk
 
 
 @jax.tree_util.register_pytree_node_class

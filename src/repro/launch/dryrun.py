@@ -26,12 +26,10 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 import argparse
 import functools
 import json
-import re
 import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import configs

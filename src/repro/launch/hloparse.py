@@ -185,20 +185,27 @@ def _dot_flops(instr: Instr, comp: Computation) -> float:
     """2 * prod(output dims) * prod(contracting dims of lhs)."""
     out_elems, _ = _shape_elems_bytes(instr.out_type)
     mc = _DOT_CONTRACT.search(instr.line)
-    # find lhs operand's type by name lookup in the same computation
     args = re.search(r"\b" + re.escape(instr.op) + r"\(([^)]*)\)",
                      instr.line)
     contract = 1
     if mc and args:
-        lhs_name = args.group(1).split(",")[0].strip().lstrip("%")
-        lhs = comp.find(lhs_name)
-        if lhs is not None:
-            m2 = _SHAPE_RE.search(lhs.out_type)
-            if m2:
-                dims = [int(d) for d in m2.group(2).split(",") if d]
-                for ci in mc.group(1).split(","):
-                    if ci:
-                        contract *= dims[int(ci)]
+        dims = None
+        # newer jaxlib prints typed operands inline: dot(f32[16,128] %a, ...)
+        m2 = _SHAPE_RE.search(args.group(1))
+        if m2:
+            dims = [int(d) for d in m2.group(2).split(",") if d]
+        else:
+            # untyped operand list: resolve the lhs by name lookup
+            lhs_name = args.group(1).split(",")[0].strip().lstrip("%")
+            lhs = comp.find(lhs_name)
+            if lhs is not None:
+                m3 = _SHAPE_RE.search(lhs.out_type)
+                if m3:
+                    dims = [int(d) for d in m3.group(2).split(",") if d]
+        if dims:
+            for ci in mc.group(1).split(","):
+                if ci:
+                    contract *= dims[int(ci)]
     return 2.0 * out_elems * contract
 
 
@@ -217,9 +224,13 @@ _MEM_OPS = {"fusion", "dot", "custom-call", "convolution", "copy",
 def _operand_bytes(instr: Instr, comp: Computation) -> float:
     args = re.search(r"\b" + re.escape(instr.op) + r"\(([^)]*)\)",
                      instr.line)
-    total = 0.0
     if not args:
         return 0.0
+    if _SHAPE_RE.search(args.group(1)):
+        # typed operand list: sum the inline shapes directly
+        _, b = _shape_elems_bytes(args.group(1))
+        return float(b)
+    total = 0.0
     for a in args.group(1).split(","):
         a = a.strip().lstrip("%")
         src = comp.find(a)

@@ -9,18 +9,26 @@ from __future__ import annotations
 import jax
 
 
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` with explicit Auto axis types where the jax
+    version supports them (``jax.sharding.AxisType`` appeared after
+    0.4.x; Auto is the implicit behaviour on older versions)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """(16, 16) data x model single-pod, (2, 16, 16) pod x data x model
     multi-pod — 256 / 512 TPU v5e chips."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 4, model: int = 2):
     """Small mesh over forced host devices — used by CPU integration
     tests (8 devices) to exercise the exact same sharding rules."""
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((data, model), ("data", "model"))

@@ -11,7 +11,6 @@ from __future__ import annotations
 import re
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models.common import ModelConfig, Sharder

@@ -24,12 +24,12 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core import PrecisionConfig
 from repro.core.distributed import dist_cholesky
 from repro.launch import hloparse
+from repro.launch.mesh import make_mesh
 
 
 def run(n=65536, shards=256, schedule="bcast", levels=("bf16", "f32"),
         leaf=256, out_dir="experiments/dryrun", compress_comm=False):
-    mesh = jax.make_mesh((shards,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((shards,), ("model",))
     cfg = PrecisionConfig(levels=tuple(levels), leaf=leaf)
     a_struct = jax.ShapeDtypeStruct((n, n), jnp.float32)
     sh = NamedSharding(mesh, P("model", None))

@@ -68,7 +68,6 @@ def _ssd_chunk_scan(xh, bmat, cmat, dt, a, state0):
     Returns (y [B,S,H,P], state_T).
     """
     B, S, H, P = xh.shape
-    N = bmat.shape[-1]
     Q = min(CHUNK, S)
     assert S % Q == 0, (S, Q)
     nc = S // Q

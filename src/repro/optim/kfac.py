@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.precision import PrecisionConfig
+from repro.core.refine import refine_steps, scaled_solve
 from repro.core.tree import tree_potrf, tree_trsm_left
 from repro.optim import adamw
 
@@ -52,6 +53,9 @@ class TreeNewtonConfig:
     damping: float = 1e-3
     ema: float = 0.95
     max_side: int = 32768       # skip matrices with larger fan-in
+    refine_sweeps: int = 0      # IR sweeps per whiten, reusing the cached
+                                # factor against the CURRENT damped stats —
+                                # tightens the solve between refactors
 
 
 def _path_str(path):
@@ -100,30 +104,49 @@ def _update_stats(g, a, cfg: TreeNewtonConfig):
     return cfg.ema * a + (1 - cfg.ema) * gg
 
 
+def _damped(a, cfg: TreeNewtonConfig):
+    n = a.shape[-1]
+    tr = jnp.trace(a, axis1=-2, axis2=-1)[..., None, None] / n
+    return a + (cfg.damping * tr + 1e-12) * jnp.eye(n, dtype=a.dtype)
+
+
 def _refactor(a, cfg: TreeNewtonConfig):
     """vmap tree-POTRF over (layers x blocks) of damped stats."""
     n = a.shape[-1]
-    tr = jnp.trace(a, axis1=-2, axis2=-1)[..., None, None] / n
-    damped = a + (cfg.damping * tr + 1e-12) * jnp.eye(n, dtype=a.dtype)
-    flat = damped.reshape(-1, n, n)
+    flat = _damped(a, cfg).reshape(-1, n, n)
     chol = jax.vmap(lambda m: tree_potrf(m, cfg.precision))(flat)
     return chol.reshape(a.shape)
 
 
-def _whiten(g, l, cfg: TreeNewtonConfig):
+def _whiten(g, l, a, cfg: TreeNewtonConfig):
     """Solve (L L^T) X = G per block via two tree solves; keep grafted
-    AdamW magnitude (per-matrix norm)."""
+    AdamW magnitude (per-matrix norm).
+
+    With ``refine_sweeps > 0``, each base solve is followed by unrolled
+    IR sweeps against the CURRENT damped stats ``a`` — the cached factor
+    (possibly ``factor_every`` steps stale) is reused as the corrector,
+    so curvature drift between refactors is absorbed at O(n^2) cost
+    instead of an O(n^3) refactorization.
+    """
     gb = _to_blocks(g.astype(jnp.float32), cfg.block)
     shape = gb.shape
     n, dout = shape[-2], shape[-1]
     gf = gb.reshape(-1, n, dout)
     lf = l.reshape(-1, n, n)
+    af = _damped(a, cfg).astype(jnp.float32).reshape(-1, n, n)
 
-    def solve(li, gi):
-        y = tree_trsm_left(gi, li, cfg.precision, trans=False)
-        return tree_trsm_left(y, li, cfg.precision, trans=True)
+    def solve(li, ai, gi):
+        def base(r):
+            y = tree_trsm_left(r, li, cfg.precision, trans=False)
+            return tree_trsm_left(y, li, cfg.precision, trans=True)
 
-    x = jax.vmap(solve)(lf, gf).reshape(shape)
+        x = base(gi)
+        if cfg.refine_sweeps > 0:
+            x = refine_steps(lambda v: ai @ v, scaled_solve(base), gi, x,
+                             cfg.refine_sweeps)
+        return x
+
+    x = jax.vmap(solve)(lf, af, gf).reshape(shape)
     x = x.reshape(g.shape)
     # graft: rescale to the raw gradient's norm per matrix
     axes = tuple(range(g.ndim - 2, g.ndim))
@@ -155,12 +178,12 @@ def apply(grads, state, params, cfg: TreeNewtonConfig):
     factors = jax.tree.map(maybe_factor, stats, state["factors"],
                            is_leaf=lambda x: x is None)
 
-    def precond(l, g):
+    def precond(l, a, g):
         if l is None:
             return g
-        return _whiten(g, l, cfg)
+        return _whiten(g, l, a, cfg)
 
-    pgrads = jax.tree.map(precond, factors, grads,
+    pgrads = jax.tree.map(precond, factors, stats, grads,
                           is_leaf=lambda x: x is None)
     new_params, adam_state, metrics = adamw.apply(
         pgrads, state["adam"], params, cfg.adam)

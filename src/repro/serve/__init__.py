@@ -1,1 +1,2 @@
-from repro.serve.engine import generate, prefill_step, serve_step  # noqa: F401
+from repro.serve.engine import (SolveInfo, SolverEngine,  # noqa: F401
+                                generate, prefill_step, serve_step)

@@ -10,14 +10,25 @@ serve_step. Continuous batching at cluster scale would slot new requests
 into free cache rows between steps; the cache layout (batch-major,
 position-indexed) is chosen so that insertion is a dynamic_update_slice
 per row (documented seam, not exercised here).
+
+``SolverEngine`` is the linear-algebra side of serving: SPD solve
+requests carry a per-request ACCURACY TARGET (decimal digits of relative
+residual) instead of naming a precision ladder. The engine always
+factorizes in the cheapest ladder and spends iterative-refinement sweeps
+— O(n^2) each — to reach the requested digits, caching factors across
+requests that share a matrix.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.precision import PAPER_CONFIGS, PrecisionConfig
+from repro.core.refine import RefineConfig, RefineResult
+from repro.core.solve import cholesky, refine_solve
 from repro.models import transformer as T
 from repro.models.common import ModelConfig, NO_SHARD, Sharder
 
@@ -61,6 +72,90 @@ def generate(params, prompt_batch, cfg: ModelConfig, *, n_tokens: int,
         tok = _pick(logits, cfg, temperature, rng, i)
         outs.append(tok)
     return jnp.concatenate(outs, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# accuracy-targeted SPD solve serving
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class SolveInfo:
+    """Per-request serving metadata returned next to the solution."""
+
+    ladder: str                 # PAPER_CONFIGS key actually used
+    method: str                 # "ir" | "gmres"
+    sweeps: int                 # refinement sweeps spent
+    residual: float             # achieved relative residual
+    converged: bool
+    target_digits: float        # digits actually targeted (post-clamp)
+    factor_cached: bool         # True if the factor was reused
+
+
+class SolverEngine:
+    """Serve SPD solves against a per-request accuracy target.
+
+    Clients ask for *digits* (``-log10`` of the relative residual), not a
+    precision ladder: the engine always factorizes in its cheap default
+    ladder and buys accuracy with iterative-refinement sweeps (O(n^2)
+    each) instead of higher-precision factorizations (O(n^3)). Targets
+    beyond the residual precision's floor are clamped (f32 residuals cap
+    at ~7 digits; enable x64 for more — the engine picks the widest
+    enabled dtype automatically).
+
+    Factors are cached under a caller-provided ``cache_key`` so request
+    streams that share a matrix (GP hyperparameter sweeps, K-FAC-style
+    repeated solves) pay the O(n^3) factorization once.
+    """
+
+    #: digits attainable by the residual precision (with ~1 digit margin)
+    _FLOOR_DIGITS = {"f32": 7.0, "f64": 14.0}
+
+    def __init__(self, ladder: str | PrecisionConfig = "bf16_f32", *,
+                 max_sweeps: int = 10, gmres_restart: int = 16):
+        if isinstance(ladder, str):
+            self.ladder_name = ladder
+            self.cfg = PAPER_CONFIGS[ladder]
+        else:
+            self.ladder_name = ladder.describe()
+            self.cfg = ladder
+        self.max_sweeps = max_sweeps
+        self.gmres_restart = gmres_restart
+        self._factors: dict = {}
+
+    def _clamp(self, target_digits: float) -> float:
+        rname = "f64" if jax.config.jax_enable_x64 else "f32"
+        return min(float(target_digits), self._FLOOR_DIGITS[rname])
+
+    def factor(self, a, cache_key=None):
+        """Factorize (or fetch the cached factor for) ``a``."""
+        if cache_key is not None and cache_key in self._factors:
+            return self._factors[cache_key], True
+        l = cholesky(a, self.cfg)
+        if cache_key is not None:
+            self._factors[cache_key] = l
+        return l, False
+
+    def evict(self, cache_key):
+        self._factors.pop(cache_key, None)
+
+    def solve(self, a, b, *, target_digits: float = 6.0,
+              method: str = "ir", cache_key=None):
+        """Solve A x = b to ``target_digits``; returns ``(x, SolveInfo)``.
+
+        ``method="gmres"`` requests GMRES-IR for ill-conditioned systems
+        where classic IR stalls.
+        """
+        digits = self._clamp(target_digits)
+        rcfg = RefineConfig(max_sweeps=self.max_sweeps,
+                            tol=10.0 ** -digits, method=method,
+                            gmres_restart=self.gmres_restart)
+        l, cached = self.factor(a, cache_key)
+        res: RefineResult = refine_solve(a, b, self.cfg, refine=rcfg, l=l)
+        info = SolveInfo(ladder=self.ladder_name, method=method,
+                         sweeps=int(res.iterations),
+                         residual=float(res.residual),
+                         converged=bool(res.converged),
+                         target_digits=digits, factor_cached=cached)
+        return res.x, info
 
 
 def _pick(logits, cfg: ModelConfig, temperature, rng, i):

@@ -9,6 +9,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 import repro.core as core
+from repro.launch.mesh import make_mesh
 from repro.core import distributed as dist
 
 needs8 = pytest.mark.skipif(jax.device_count() < 8,
@@ -16,8 +17,7 @@ needs8 = pytest.mark.skipif(jax.device_count() < 8,
 
 
 def _setup(n=1024, seed=2):
-    mesh = jax.make_mesh((8,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((8,), ("model",))
     rng = np.random.default_rng(seed)
     m = rng.uniform(-1, 1, (n, n))
     a64 = m @ m.T + n * np.eye(n)

@@ -8,6 +8,7 @@ import numpy as np
 import pytest
 
 from repro import checkpoint as ckpt
+from repro.launch.mesh import make_mesh
 from repro.data import SyntheticLM
 from repro.launch import sharding as SH
 from repro.models.common import ModelConfig
@@ -24,8 +25,7 @@ TCFG = TrainConfig(adam=AdamWConfig(lr=1e-2, warmup=0, total_steps=50))
 
 
 def _mesh(data, model):
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((data, model), ("data", "model"))
 
 
 def _state_shardings(state, mesh):

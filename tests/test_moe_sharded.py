@@ -9,7 +9,7 @@ import numpy as np
 import pytest
 
 from repro.models import moe
-from repro.models import transformer as T
+from repro.launch.mesh import make_mesh
 from repro.models.common import ModelConfig, Sharder
 
 needs8 = pytest.mark.skipif(jax.device_count() < 8,
@@ -17,8 +17,7 @@ needs8 = pytest.mark.skipif(jax.device_count() < 8,
 
 
 def _mesh():
-    return jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((4, 2), ("data", "model"))
 
 
 MOE_CFG = ModelConfig(

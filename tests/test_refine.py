@@ -1,0 +1,221 @@
+"""Iterative-refinement tests: convergence of classic IR and GMRES-IR
+across precision ladders (f64 reference under jax_enable_x64), the
+zero-sweep no-op contract, the operator-level API used by K-FAC, and the
+accuracy-targeted serve engine."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.experimental import enable_x64
+
+import repro.core as core
+
+RNG = np.random.default_rng(11)
+
+
+def spd(n, dtype=np.float64, seed=0):
+    rng = np.random.default_rng(seed)
+    m = rng.uniform(-1, 1, (n, n))
+    return ((m @ m.T + n * np.eye(n))).astype(dtype)
+
+
+LADDERS = ["pure_f16", "f16_f32", "bf16_f32"]
+
+
+@pytest.mark.parametrize("ladder", LADDERS)
+@pytest.mark.parametrize("method", ["ir", "gmres"])
+def test_refine_converges_x64(ladder, method):
+    """Every cheap ladder must reach ~f64 working accuracy: residuals in
+    f64, corrections through the low-precision factor."""
+    with enable_x64():
+        n = 512
+        a = spd(n)
+        b = a @ np.random.default_rng(1).standard_normal(n)
+        rcfg = core.RefineConfig(max_sweeps=8, tol=1e-10, method=method,
+                                 gmres_restart=8)
+        res = core.refine_solve(a, b, core.PAPER_CONFIGS[ladder],
+                                refine=rcfg)
+        assert bool(res.converged), float(res.residual)
+        assert float(res.residual) <= 1e-10
+        relres = (np.linalg.norm(a @ np.asarray(res.x, np.float64) - b)
+                  / np.linalg.norm(b))
+        assert relres <= 5e-10, relres  # history matches true residual
+
+
+def test_acceptance_f16_f32_5_sweeps():
+    """ISSUE acceptance: 1024x1024 well-conditioned SPD, f16_f32 ladder,
+    classic IR hits relative residual <= 1e-10 within 5 sweeps."""
+    with enable_x64():
+        n = 1024
+        a = spd(n, seed=3)
+        b = a @ np.random.default_rng(3).standard_normal(n)
+        res = core.refine_solve(a, b, core.PAPER_CONFIGS["f16_f32"],
+                                refine=core.RefineConfig(max_sweeps=5,
+                                                         tol=1e-10))
+        assert bool(res.converged)
+        assert int(res.iterations) <= 5
+        assert float(res.residual) <= 1e-10
+
+
+def test_zero_sweeps_matches_plain_solve():
+    n = 384
+    a = spd(n, dtype=np.float32, seed=5)
+    b = np.random.default_rng(5).standard_normal((n, 3)).astype(np.float32)
+    cfg = core.PAPER_CONFIGS["f16_f32"]
+    plain = np.asarray(core.cholesky_solve(a, b, cfg))
+    res = core.refine_solve(a, b, cfg, refine=0)
+    np.testing.assert_array_equal(np.asarray(res.x, np.float32), plain)
+    assert int(res.iterations) == 0
+
+
+def test_refine_result_contract():
+    n = 256
+    a = spd(n, dtype=np.float32, seed=7)
+    b = (a @ np.random.default_rng(7).standard_normal(n)).astype(np.float32)
+    rcfg = core.RefineConfig(max_sweeps=4, tol=1e-6)
+    res = core.refine_solve(a, b, core.PAPER_CONFIGS["pure_f16"],
+                            refine=rcfg)
+    hist = np.asarray(res.history)
+    k = int(res.iterations)
+    assert hist.shape == (5,)
+    assert np.isfinite(hist[:k + 1]).all()
+    assert np.isnan(hist[k + 1:]).all()      # untaken sweeps stay nan
+    assert float(res.residual) == np.nanmin(hist)   # best iterate wins
+    assert hist[0] > float(res.residual)     # refinement helped
+    assert res.x.shape == (n,)
+
+
+def test_refine_never_degrades_past_floor():
+    """At the f32 residual floor (x64 off) refinement stalls; the loop
+    must return the BEST iterate and stop early, not the last one."""
+    n = 512
+    a = spd(n, dtype=np.float32, seed=23)
+    b = (a @ np.random.default_rng(23).standard_normal(n)).astype(np.float32)
+    cfg = core.PrecisionConfig(levels=("f32",), leaf=128)
+    res = core.refine_solve(a, b, cfg,
+                            refine=core.RefineConfig(max_sweeps=5,
+                                                     tol=1e-12))
+    hist = np.asarray(res.history)
+    base = hist[0]
+    assert float(res.residual) <= base          # never worse than x0
+    assert int(res.iterations) < 5              # stall detected early
+
+
+def test_cholesky_solve_refine_param():
+    n = 256
+    a = spd(n, dtype=np.float32, seed=9)
+    b = (a @ np.random.default_rng(9).standard_normal(n)).astype(np.float32)
+    cfg = core.PAPER_CONFIGS["bf16_f32"]
+    x0 = np.asarray(core.cholesky_solve(a, b, cfg), np.float64)
+    xr = np.asarray(core.cholesky_solve(a, b, cfg, refine=3), np.float64)
+    r0 = np.linalg.norm(a @ x0 - b) / np.linalg.norm(b)
+    rr = np.linalg.norm(a @ xr - b) / np.linalg.norm(b)
+    assert rr < r0 / 10, (r0, rr)
+    assert xr.shape == (n,) and core.cholesky_solve(
+        a, b, cfg, refine=3).dtype == b.dtype
+
+
+def test_refine_steps_operator():
+    """The unrolled hot-path variant K-FAC uses: fixed sweeps against a
+    deliberately stale preconditioner still contract the residual."""
+    n = 128
+    a = spd(n, dtype=np.float32, seed=13)
+    stale = a + 0.05 * np.diag(np.abs(np.random.default_rng(13)
+                                      .standard_normal(n))).astype(np.float32)
+    l = np.linalg.cholesky(stale.astype(np.float64)).astype(np.float32)
+    b = (a @ np.random.default_rng(14).standard_normal(n)).astype(np.float32)
+
+    import scipy.linalg as sla
+
+    def correct(r):
+        y = sla.solve_triangular(l, np.asarray(r), lower=True)
+        return jnp.asarray(sla.solve_triangular(l.T, y))
+
+    matvec = lambda x: jnp.asarray(a) @ x  # noqa: E731
+    x0 = correct(b)
+    x = core.refine_steps(matvec, core.scaled_solve(correct),
+                          jnp.asarray(b), x0, sweeps=4)
+    r0 = np.linalg.norm(a @ np.asarray(x0) - b)
+    r4 = np.linalg.norm(a @ np.asarray(x) - b)
+    assert r4 < r0 / 50, (r0, r4)
+
+
+def test_kfac_refine_sweeps_improves_whitening():
+    """TreeNewtonConfig.refine_sweeps: IR against the CURRENT damped
+    stats with a stale cached factor must steer the whitened direction
+    toward the true Newton direction (A x ∝ g). Uses the identity
+    factor K-FAC starts from — maximally stale — and also smokes the
+    full jitted apply() path with refinement on."""
+    import jax
+
+    from repro.optim import kfac
+
+    cfg = kfac.TreeNewtonConfig(block=128, refine_sweeps=3)
+    cfg0 = kfac.TreeNewtonConfig(block=128, refine_sweeps=0)
+    # stats drifted by several EMA steps since the factor was cached
+    rng = np.random.default_rng(31)
+    a_old = spd(128, dtype=np.float64, seed=31) / 128
+    gg = rng.standard_normal((128, 256)) / 16
+    a_new = 0.8 * a_old + 0.2 * (gg @ gg.T) / 256
+    a_s = jnp.asarray(a_new, jnp.float32)[None]
+    l_stale = jnp.asarray(np.linalg.cholesky(
+        np.asarray(kfac._damped(jnp.asarray(a_old)[None], cfg))[0]),
+        jnp.float32)[None]
+    g = jnp.asarray(rng.standard_normal((128, 8)), jnp.float32)
+
+    damped = np.asarray(kfac._damped(a_s, cfg))[0]
+
+    def cos(x):
+        ax = (damped @ np.asarray(x)).ravel()
+        gf = np.asarray(g).ravel()
+        return ax @ gf / (np.linalg.norm(ax) * np.linalg.norm(gf))
+
+    x0 = kfac._whiten(g, l_stale, a_s, cfg0)
+    x3 = kfac._whiten(g, l_stale, a_s, cfg)
+    # angle error to the exact Newton direction shrinks >=10x
+    assert 1 - cos(x3) < (1 - cos(x0)) / 10, (cos(x0), cos(x3))
+    assert cos(x3) > 1 - 1e-6, cos(x3)
+
+    params = {"mlp": {"w_in": jnp.zeros((128, 8))}}
+    grads = {"mlp": {"w_in": g}}
+    state = kfac.init(params, cfg)
+    step = jax.jit(lambda gr, s, p: kfac.apply(gr, s, p, cfg))
+    p1, s1, _ = step(grads, state, params)
+    assert all(np.isfinite(x).all() for x in jax.tree.leaves(p1))
+
+
+def test_gmres_beats_ir_when_factor_is_poor():
+    """GMRES-IR tolerates a preconditioner too weak for classic IR."""
+    with enable_x64():
+        n = 256
+        a = spd(n, seed=17)
+        # degrade the preconditioner far beyond ladder quality
+        noise = np.random.default_rng(17).standard_normal((n, n))
+        m_bad = a + 0.35 * (noise @ noise.T) / n
+        l = np.linalg.cholesky(m_bad)
+        b = a @ np.random.default_rng(18).standard_normal(n)
+        cfg = core.PrecisionConfig(levels=("f32",), leaf=128)
+        kw = dict(max_sweeps=6, gmres_restart=10)
+        ir = core.refine_solve(a, b, cfg, l=l,
+                               refine=core.RefineConfig(tol=1e-10, **kw))
+        gm = core.refine_solve(
+            a, b, cfg, l=l, refine=core.RefineConfig(
+                tol=1e-10, method="gmres", **kw))
+        assert float(gm.residual) < float(ir.residual) / 10
+        assert bool(gm.converged)
+
+
+def test_solver_engine_targets():
+    from repro.serve import SolverEngine
+    n = 384
+    a = spd(n, dtype=np.float32, seed=21)
+    b = (a @ np.random.default_rng(21).standard_normal(n)).astype(np.float32)
+    eng = SolverEngine("f16_f32", max_sweeps=8)
+    x, info = eng.solve(a, b, target_digits=6.0, cache_key="k")
+    assert info.converged and info.residual <= 1e-6
+    assert not info.factor_cached
+    _, info2 = eng.solve(a, b, target_digits=3.0, cache_key="k")
+    assert info2.factor_cached and info2.sweeps <= info.sweeps
+    # targets beyond the residual precision clamp instead of spinning
+    _, info3 = eng.solve(a, b, target_digits=99.0, cache_key="k")
+    assert info3.target_digits <= 14.0
+    assert info3.sweeps <= 8

@@ -4,6 +4,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.launch import hloparse
+from repro.launch.mesh import make_mesh
 
 
 def _compile(fn, *args):
@@ -21,7 +22,10 @@ def test_cost_analysis_undercounts_scans():
         return jax.lax.scan(body, x, None, length=8)[0]
 
     c = _compile(f, x, w)
-    xla = c.cost_analysis()["flops"]
+    ca = c.cost_analysis()
+    if isinstance(ca, list):  # jaxlib < 0.5 returns [dict] per partition
+        ca = ca[0]
+    xla = ca["flops"]
     ours = hloparse.census(c.as_text())["flops"]
     expect = 2 * 32 * 256 * 256 * 8
     assert xla < expect / 2          # XLA counts the body once
@@ -48,13 +52,11 @@ def test_census_nested_loops():
 
 
 def test_census_counts_collectives():
-    import numpy as np
     if jax.device_count() < 2:
         import pytest
         pytest.skip("needs >=2 devices (subprocess runner)")
     from jax.sharding import NamedSharding, PartitionSpec as P
-    mesh = jax.make_mesh((2,), ("x",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((2,), ("x",))
     xs = jax.ShapeDtypeStruct((128, 64), jnp.float32)
     ws = jax.ShapeDtypeStruct((64, 64), jnp.float32)
 

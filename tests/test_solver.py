@@ -1,13 +1,26 @@
 """Core solver tests: correctness, precision-ladder properties (paper
 Fig. 8 ordering), quantization invariants — including hypothesis
 property-based tests on the system's invariants."""
-import functools
-
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # optional dep (pip install -e .[test] brings it)
+    # Shim so only the property tests skip; a module-level
+    # pytest.importorskip would skip the whole file.
+    _SKIP = pytest.mark.skip(reason="hypothesis not installed")
+
+    def given(**_kw):
+        return lambda _f: _SKIP(_f)
+
+    def settings(**_kw):
+        return lambda f: f
+
+    class st:  # noqa: N801 - mirrors `hypothesis.strategies as st`
+        integers = staticmethod(lambda *a, **k: None)
+        floats = staticmethod(lambda *a, **k: None)
 
 import repro.core as core
 

@@ -9,9 +9,11 @@ import numpy as np
 import pytest
 
 from repro import checkpoint as ckpt
+from repro.compat import shard_map
+from repro.launch.mesh import make_mesh
 from repro.data import SyntheticLM
 from repro.models.common import ModelConfig
-from repro.optim import AdamWConfig, TreeNewtonConfig, kfac
+from repro.optim import AdamWConfig, TreeNewtonConfig
 from repro.train import (TrainConfig, compress, init_state, make_train_step,
                          reshape_for_accum)
 
@@ -124,8 +126,7 @@ def test_ef_compression_dp_trainer():
         pytest.skip("needs --xla_force_host_platform_device_count=8 "
                     "(run via tests/conftest multi-device session)")
     from jax.sharding import PartitionSpec as P
-    mesh = jax.make_mesh((8,), ("dp",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((8,), ("dp",))
     rng = np.random.default_rng(0)
     w_true = rng.standard_normal((16, 4)).astype(np.float32)
     X = rng.standard_normal((64, 16)).astype(np.float32)
@@ -139,14 +140,14 @@ def test_ef_compression_dp_trainer():
         g, res = compress.ef_allreduce_mean({"w": g}, {"w": res}, "dp")
         return w - lr * g["w"], res["w"][None]
 
-    fn = jax.jit(jax.shard_map(
+    fn = jax.jit(shard_map(
         local_step, mesh=mesh,
         in_specs=(P(), P("dp"), P("dp"), P("dp"), P()),
         out_specs=(P(), P("dp"))))
     w = jnp.zeros((16, 4))
     res = jnp.zeros((8, 16, 4))         # per-replica EF residual
     lr = jnp.float32(0.05)
-    for _ in range(300):
-        w, res = fn(w, res, X, Y, lr)
+    for _ in range(600):    # int8 EF noise slows early progress; err at
+        w, res = fn(w, res, X, Y, lr)   # 600 steps is ~9e-3, margin 5x
     err = float(jnp.abs(w - w_true).max())
     assert err < 5e-2, err
