@@ -1,0 +1,131 @@
+"""Solve-serving benchmark: cross-request batching + fused residual.
+
+Measures the two serve-side claims of the batched request loop:
+
+  * requests/sec vs. batch size — R requests sharing a factor, solved
+    sequentially (one ``SolverEngine.solve`` per request) vs. batched
+    through the :class:`~repro.serve.scheduler.BatchScheduler` (one
+    multi-RHS refine call with per-column convergence). Each sequential
+    sweep is an O(n^2) GEMV + dispatch round-trip per request; the
+    batched sweep is one BLAS3-shaped GEMM for the whole batch. GATED:
+    batched must beat sequential once >= 4 requests share a factor.
+  * fused vs. unfused residual — the Pallas ``r = b - A x`` kernel
+    against the XLA oracle, REQUIRED to agree allclose in the residual
+    dtype (the acceptance gate; on CPU the fused kernel runs in
+    interpret mode, so the comparison is correctness + reference timing,
+    not a speed claim — the speed path is the TPU MXU).
+
+Smoke mode (REPRO_BENCH_SMOKE=1, --smoke, or run.py --smoke) shrinks
+sizes so the CI bench job finishes in seconds; ``--out`` writes the rows
+as a JSON artifact (CI uploads it on every PR).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+import jax
+import numpy as np
+
+# allow `python benchmarks/bench_serve.py` (script dir shadows the root)
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
+
+from benchmarks.util import emit, spd_matrix, timeit  # noqa: E402
+from repro.kernels import ops, ref  # noqa: E402
+from repro.serve import BatchScheduler, SolverEngine  # noqa: E402
+
+LADDER = "f16_f32"
+
+
+def _bench_request_loop(n, counts, ladder=LADDER):
+    a = spd_matrix(n)
+    rng = np.random.default_rng(0)
+    eng = SolverEngine(ladder, max_sweeps=8)
+    eng.factor(a, cache_key="bench")     # exclude the one-off O(n^3) cost
+    for r in counts:
+        bs = [(a @ rng.standard_normal(n)).astype(np.float32)
+              for _ in range(r)]
+
+        def seq():
+            return [eng.solve(a, b, target_digits=6.0,
+                              cache_key="bench")[0] for b in bs]
+
+        sch = BatchScheduler(eng, max_batch=max(counts))
+
+        def batched():
+            for b in bs:
+                sch.submit(a, b, target_digits=6.0, cache_key="bench")
+            return [x for x, _ in sch.drain().values()]
+
+        t_seq = timeit(seq, warmup=1, iters=3)
+        t_bat = timeit(batched, warmup=1, iters=3)
+        speedup = t_seq / t_bat
+        emit(f"serve_seq_{ladder}_n{n}_r{r}", t_seq,
+             f"req_per_s={r / (t_seq * 1e-6):.1f}")
+        emit(f"serve_batched_{ladder}_n{n}_r{r}", t_bat,
+             f"req_per_s={r / (t_bat * 1e-6):.1f};"
+             f"speedup_vs_seq={speedup:.2f}")
+        # acceptance gate: batching must beat sequential once >=4
+        # requests share a factor (typical margin is 3-6x, so a 1.0
+        # threshold leaves plenty of room for noisy CI runners)
+        if r >= 4 and speedup < 1.0:
+            raise AssertionError(
+                f"batched serving slower than sequential at n={n}, "
+                f"r={r}: speedup {speedup:.2f}")
+
+
+def _bench_residual(n, k=8):
+    """Fused-vs-XLA residual: allclose gate + timings."""
+    rng = np.random.default_rng(1)
+    a = rng.standard_normal((n, n)).astype(np.float32)
+    x = rng.standard_normal((n, k)).astype(np.float32)
+    b = rng.standard_normal((n, k)).astype(np.float32)
+    fused_impl = "pallas" if jax.default_backend() == "tpu" else "interpret"
+    r_ref = ref.residual_ref(a, x, b)
+    r_fused = ops.residual(a, x, b, impl=fused_impl)
+    diff = float(np.max(np.abs(np.asarray(r_fused, np.float64)
+                               - np.asarray(r_ref, np.float64))))
+    scale = float(np.max(np.abs(np.asarray(r_ref))))
+    ok = bool(np.allclose(np.asarray(r_fused), np.asarray(r_ref),
+                          rtol=2e-4, atol=2e-4 * max(scale, 1.0)))
+    t_ref = timeit(lambda: ops.residual(a, x, b, impl="jnp"))
+    t_fused = timeit(lambda: ops.residual(a, x, b, impl=fused_impl))
+    emit(f"serve_residual_fused_n{n}_k{k}", t_fused,
+         f"allclose={ok};max_abs_diff={diff:.3e};xla_us={t_ref:.1f};"
+         f"impl={fused_impl}")
+    if not ok:  # the acceptance gate: fused must match the XLA fallback
+        raise AssertionError(
+            f"fused residual diverged from XLA oracle: {diff:.3e}")
+
+
+def run(sizes=(512, 1024), counts=(1, 2, 4, 8, 16)):
+    for n in sizes:
+        _bench_request_loop(n, counts)
+    _bench_residual(max(sizes))
+
+
+if __name__ == "__main__":
+    import argparse
+
+    from benchmarks import util
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes (CI bench-smoke job)")
+    ap.add_argument("--out", default=None, metavar="PATH",
+                    help="write rows as a JSON artifact")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    if args.smoke or os.environ.get("REPRO_BENCH_SMOKE") == "1":
+        run(sizes=(256,), counts=(1, 4, 8))
+    else:
+        run()
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"smoke": bool(args.smoke), "rows": list(util.ROWS)},
+                      f, indent=1)
+        print(f"# wrote {len(util.ROWS)} rows to {args.out}",
+              file=sys.stderr)

@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV (assignment contract).
   bench_cholesky     Fig. 6/7 Cholesky throughput + speedup
   bench_accuracy     Fig. 8   precision-ladder digits (x64 subprocess)
   bench_refine       beyond-paper IR digits/sweep (x64 subprocess)
+  bench_serve        beyond-paper batched solve serving + fused residual
   bench_depth        Fig. 10  size/depth scaling
   bench_portability  Fig. 9/11 backend dispatch agreement
   bench_dist         beyond-paper multi-chip solver (8-dev subprocess)
@@ -79,19 +80,22 @@ def main(argv=None) -> None:
 
     print("name,us_per_call,derived")
     from benchmarks import (bench_cholesky, bench_depth, bench_portability,
-                            bench_syrk, bench_trsm, util)
+                            bench_serve, bench_syrk, bench_trsm, util)
     if args.smoke:
         bench_syrk.run(sizes=(256,))
         bench_trsm.run(sizes=(256,))
         bench_cholesky.run(sizes=(256,))
         bench_depth.run(sizes=(256, 1024, 4096))
         bench_portability.run(sizes=(256,))
+        # bench_serve is skipped in smoke mode: CI's bench-smoke job runs
+        # it as its own step (bench_serve.py --smoke --out bench-serve.json)
     else:
         bench_syrk.run()
         bench_trsm.run()
         bench_cholesky.run()
         bench_depth.run()
         bench_portability.run()
+        bench_serve.run()
     sub_rows = _sub("benchmarks.bench_accuracy", {"JAX_ENABLE_X64": "1"})
     sub_rows += _sub("benchmarks.bench_refine", {"JAX_ENABLE_X64": "1"})
     sub_rows += _sub(

@@ -49,12 +49,14 @@ for name, levels in [("f32", ("f32",)), ("bf16+f32", ("bf16", "f32")),
     res0 = (np.linalg.norm(K @ np.asarray(alpha, np.float64)[:, 0] - y)
             / np.linalg.norm(y))
     # iterative refinement claws back the digits the cheap ladder drops:
-    # same factor, a few O(n^2) sweeps (see repro.core.refine).
-    ref = refine_solve(K32, y.astype(np.float32)[:, None], cfg,
+    # same factor, a few O(n^2) sweeps (see repro.core.refine). A vector
+    # RHS keeps the scalar result contract (multi-RHS blocks report
+    # residual/iterations PER COLUMN).
+    ref = refine_solve(K32, y.astype(np.float32), cfg,
                        refine=RefineConfig(max_sweeps=5, tol=1e-6), l=L)
     alpha_r = np.asarray(ref.x, np.float64)
-    mean = Ks.T @ alpha_r[:, 0]
-    lml = float(-0.5 * y @ alpha_r[:, 0]
+    mean = Ks.T @ alpha_r
+    lml = float(-0.5 * y @ alpha_r
                 - 0.5 * float(logdet(L))
                 - 0.5 * N_TRAIN * np.log(2 * np.pi))
     truth = np.sin(2 * xs) + 0.5 * np.sin(7 * xs)

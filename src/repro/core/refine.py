@@ -24,6 +24,16 @@ converged flag). The operator-level entry points (:func:`refine_operator`,
 :func:`refine_steps`) take ``matvec``/``correct`` callables so callers
 that already hold a factor — the K-FAC optimizer, the serve engine — can
 reuse it across sweeps without re-factorizing.
+
+Multi-RHS refinement is PER-COLUMN: a (n, k) right-hand side gets a
+per-column convergence mask, per-column residual history, per-column
+sweep counts and (optionally, via ``tol``) per-column tolerances, so one
+slow column doesn't burn sweeps for converged neighbors — the serve
+scheduler stacks cross-request RHS into one such call. Columns that
+converge (or stall) are frozen at their best iterate while the rest keep
+sweeping; each sweep forms ONE residual (carried between iterations, and
+fused into a single Pallas kernel on TPU — see
+:mod:`repro.kernels.residual`) instead of the naive two.
 """
 from __future__ import annotations
 
@@ -36,6 +46,7 @@ from jax import lax
 
 from repro.core.precision import DTYPES, PrecisionConfig
 from repro.core.solve import cholesky, solve_factored
+from repro.kernels import ops
 
 _TINY = 1e-30
 
@@ -67,91 +78,143 @@ class RefineResult(NamedTuple):
     """Pytree result of a refinement run.
 
     ``history[0]`` is the pre-refinement relative residual; ``history[k]``
-    the residual after sweep k (``nan`` for sweeps never run).
+    the residual after sweep k (``nan`` for sweeps never run — including,
+    for multi-RHS, sweeps where that column was already frozen).
+
+    For a vector ``b`` the per-column fields are scalars (the PR-1
+    contract); for an (n, k) ``b`` they are (k,)-shaped: residual,
+    iterations and converged are PER COLUMN and history is
+    [max_sweeps + 1, k].
     """
 
     x: jax.Array            # refined solution, residual dtype
-    residual: jax.Array     # final relative residual (scalar)
-    history: jax.Array      # [max_sweeps + 1] relative residuals
-    iterations: jax.Array   # int32 sweeps actually taken
-    converged: jax.Array    # bool, residual <= tol
+    residual: jax.Array     # final relative residual, scalar | (k,)
+    history: jax.Array      # [max_sweeps + 1(, k)] relative residuals
+    iterations: jax.Array   # int32 sweeps actually taken, scalar | (k,)
+    converged: jax.Array    # bool residual <= tol, scalar | (k,)
 
 
 # ---------------------------------------------------------------------------
 # operator-level core (factor-agnostic; K-FAC and serve reuse these)
 # ---------------------------------------------------------------------------
 def scaled_solve(correct: Callable) -> Callable:
-    """Wrap a linear corrector with absmax pre-scaling.
+    """Wrap a linear corrector with PER-COLUMN absmax pre-scaling.
 
     As IR converges the residual shrinks below f16's smallest normal
     (6.1e-5) and the per-block quantizer — which only scales *down*
     (alpha >= 1) — lets it underflow into subnormals, stalling
     convergence. Scaling r to O(1) before the solve and back after is
     exact for a linear operator and is what HPL-MxP does.
+
+    The scale is per COLUMN for multi-RHS blocks: the serve scheduler
+    stacks unrelated requests whose residual magnitudes can differ by
+    orders of magnitude (different RHS norms, different convergence
+    stages), and a single joint absmax would underflow every small
+    column next to a large neighbor. Column-wise scaling is still exact
+    — the corrector solves columns independently.
     """
     def wrapped(r):
-        s = jnp.maximum(jnp.max(jnp.abs(r)), _TINY)
+        absmax = (jnp.max(jnp.abs(r), axis=0, keepdims=True)
+                  if r.ndim == 2 else jnp.max(jnp.abs(r)))
+        s = jnp.maximum(absmax, _TINY)
         return correct(r / s) * s
 
     return wrapped
 
 
 
-def _refine_loop(sweep: Callable, relres: Callable, x0,
-                 rcfg: RefineConfig) -> RefineResult:
-    """Shared outer loop: run ``sweep`` until tol / max_sweeps / stall.
+def _colnorm(v):
+    """Per-column 2-norm: scalar for a vector, (k,) for an (n, k) block."""
+    return jnp.linalg.norm(v, axis=0) if v.ndim == 2 else jnp.linalg.norm(v)
 
-    Tracks the BEST iterate seen, not the last one: when refinement
-    stalls or diverges (residual precision floor, preconditioner too
-    weak) the caller gets back an x no worse than its starting point,
-    and the loop exits instead of burning the remaining sweeps.
-    ``history`` still records every attempted sweep.
+
+def _refine_loop(sweep: Callable, resid: Callable, relnorm: Callable, x0,
+                 rcfg: RefineConfig, tol=None) -> RefineResult:
+    """Shared outer loop: run ``sweep`` until tol / max_sweeps / stall,
+    with PER-COLUMN bookkeeping for multi-RHS blocks.
+
+    ``resid(x)`` forms the residual (one GEMM — it is carried between
+    iterations so each sweep costs a single residual evaluation, and is
+    the seam the fused Pallas kernel plugs into); ``relnorm(r)`` maps it
+    to per-column relative norms; ``sweep(x, r)`` applies one correction.
+
+    Tracks the BEST iterate seen per column, not the last one: when a
+    column stalls or diverges (residual precision floor, preconditioner
+    too weak) the caller gets back an x no worse than its starting
+    point. A column exits on convergence or after TWO consecutive
+    non-improving sweeps (no new per-column best) — a single flat sweep
+    is a normal transient for GMRES-IR restarts and non-normal IR
+    iterations, so it must not abort the run. Converged/stalled columns
+    are frozen while the rest keep sweeping, so one slow RHS doesn't
+    burn sweeps for its neighbors; their residual columns are zeroed
+    out of the sweep input so a frozen (possibly diverged) column can't
+    hijack a joint GMRES-IR restart. ``tol`` may be a per-column array
+    (the serve scheduler passes per-request accuracy targets); it
+    defaults to the scalar ``rcfg.tol``.
     """
-    rel0 = relres(x0)
-    hist0 = jnp.full((rcfg.max_sweeps + 1,), jnp.nan,
+    r0 = resid(x0)
+    rel0 = relnorm(r0)
+    tol = jnp.asarray(rcfg.tol if tol is None else tol, rel0.dtype)
+    hist0 = jnp.full((rcfg.max_sweeps + 1,) + rel0.shape, jnp.nan,
                      rel0.dtype).at[0].set(rel0)
-    state = (x0, rel0, x0, rel0, hist0, jnp.int32(0),
-             jnp.asarray(False))
+    zero = jnp.zeros(rel0.shape, jnp.int32)
+    state = (x0, r0, rel0, x0, rel0, hist0, zero, zero, jnp.int32(0))
+
+    def active(brel, stall):
+        return (brel > tol) & (stall < 2)
 
     def cond(s):
-        _, rel, _, _, _, i, stalled = s
-        return (i < rcfg.max_sweeps) & (rel > rcfg.tol) & (~stalled)
+        _, _, _, _, brel, _, _, stall, i = s
+        return (i < rcfg.max_sweeps) & jnp.any(active(brel, stall))
 
     def body(s):
-        x, rel, bx, brel, hist, i, _ = s
-        xn = sweep(x)
-        reln = relres(xn)
-        hist = hist.at[i + 1].set(reln)
-        bx = jnp.where(reln < brel, xn, bx)
-        brel = jnp.minimum(reln, brel)
-        return xn, reln, bx, brel, hist, i + 1, reln >= rel
+        x, r, rel, bx, brel, hist, its, stall, i = s
+        act = active(brel, stall)
+        rm = r * act.astype(r.dtype)             # mask frozen residuals
+        xn = jnp.where(act, sweep(x, rm), x)     # frozen columns keep x
+        rn = resid(xn)
+        reln = jnp.where(act, relnorm(rn), rel)
+        hist = hist.at[i + 1].set(jnp.where(act, reln, jnp.nan))
+        improved = reln < brel                   # new best this sweep?
+        bx = jnp.where(act & improved, xn, bx)
+        brel = jnp.where(act, jnp.minimum(reln, brel), brel)
+        stall = jnp.where(act, jnp.where(improved, 0, stall + 1), stall)
+        return (xn, rn, reln, bx, brel, hist, its + act.astype(jnp.int32),
+                stall, i + 1)
 
-    _, _, bx, brel, hist, it, _ = lax.while_loop(cond, body, state)
-    return RefineResult(bx, brel, hist, it, brel <= rcfg.tol)
+    _, _, _, bx, brel, hist, its, _, _ = lax.while_loop(cond, body, state)
+    return RefineResult(bx, brel, hist, its, brel <= tol)
 
 
 def refine_operator(matvec: Callable, correct: Callable, b, x0,
-                    rcfg: RefineConfig) -> RefineResult:
+                    rcfg: RefineConfig, *, resid: Callable | None = None,
+                    tol=None) -> RefineResult:
     """Classic IR on an abstract operator.
 
     ``matvec(x)`` applies A in the residual precision; ``correct(r)``
     applies the cheap approximate inverse (e.g. two tree-TRSMs with a
-    cached factor). Early-exits once the relative residual hits
-    ``rcfg.tol``, refinement stops improving, or ``rcfg.max_sweeps``
-    sweeps have run; returns the best iterate seen.
+    cached factor). ``resid`` overrides the residual evaluation
+    ``b - matvec(x)`` — :func:`iterative_refine` passes the fused Pallas
+    kernel here. ``tol`` may be per-column (see :func:`_refine_loop`).
+    Early-exits once the relative residual hits tolerance, refinement
+    stops improving for two consecutive sweeps, or ``rcfg.max_sweeps``
+    sweeps have run; returns the best iterate seen (per column).
     """
     rdtype = rcfg.rdtype()
     b = b.astype(rdtype)
     x0 = x0.astype(rdtype)
-    bnorm = jnp.maximum(jnp.linalg.norm(b), _TINY)
+    if resid is None:
+        def resid(x):
+            return b - matvec(x)
+    bnorm = jnp.maximum(_colnorm(b), _TINY)
 
-    def relres(x):
-        return (jnp.linalg.norm(b - matvec(x)) / bnorm).astype(rdtype)
+    def relnorm(r):
+        return (_colnorm(r) / bnorm).astype(rdtype)
 
-    def sweep(x):
-        return x + correct(b - matvec(x)).astype(rdtype)
+    def sweep(x, r):
+        return x + correct(r).astype(rdtype)
 
-    return _refine_loop(sweep, relres, x0, rcfg)
+    return _refine_loop(sweep, resid, relnorm, x0, rcfg, tol)
 
 
 def refine_steps(matvec: Callable, correct: Callable, b, x, sweeps: int):
@@ -163,7 +226,8 @@ def refine_steps(matvec: Callable, correct: Callable, b, x, sweeps: int):
 
 
 def gmres_operator(matvec: Callable, correct: Callable, b, x0,
-                   rcfg: RefineConfig) -> RefineResult:
+                   rcfg: RefineConfig, *, resid: Callable | None = None,
+                   tol=None) -> RefineResult:
     """Restarted GMRES right-preconditioned by ``correct`` (GMRES-IR).
 
     Each restart runs an ``rcfg.gmres_restart``-dimensional Arnoldi
@@ -172,15 +236,21 @@ def gmres_operator(matvec: Callable, correct: Callable, b, x0,
     loop recomputes the TRUE residual in the residual precision and
     shares :func:`_refine_loop` with classic IR, so ``max_sweeps``
     counts restarts and the two methods share a result contract
-    (best-iterate, stall detection, history).
+    (best-iterate per column, two-sweep stall detection, per-column
+    history). The Krylov cycle itself stays joint across RHS columns
+    (the flattened A (x) I_k operator); only the outer convergence
+    bookkeeping is per column.
     """
     rdtype = rcfg.rdtype()
     m = rcfg.gmres_restart
     b = b.astype(rdtype)
     x0 = x0.astype(rdtype)
+    if resid is None:
+        def resid(x):
+            return b - matvec(x)
     shape = b.shape
     n = b.size  # multi-RHS solves flatten: A (x) I_k is block-diagonal
-    bnorm = jnp.maximum(jnp.linalg.norm(b), _TINY)
+    bnorm = jnp.maximum(_colnorm(b), _TINY)
 
     def opvec(v):  # v flat, in the preconditioned (u) space
         return matvec(correct(v.reshape(shape)).astype(rdtype)).ravel()
@@ -213,14 +283,14 @@ def gmres_operator(matvec: Callable, correct: Callable, b, x0,
         y, *_ = jnp.linalg.lstsq(hess, e1)
         return (vs[:m].T @ y).reshape(shape)  # u-space correction
 
-    def relres(x):
-        return (jnp.linalg.norm(b - matvec(x)) / bnorm).astype(rdtype)
+    def relnorm(r):
+        return (_colnorm(r) / bnorm).astype(rdtype)
 
-    def sweep(x):
-        du = cycle((b - matvec(x)).ravel())
+    def sweep(x, r):
+        du = cycle(r.ravel())
         return x + correct(du).astype(rdtype)
 
-    return _refine_loop(sweep, relres, x0, rcfg)
+    return _refine_loop(sweep, resid, relnorm, x0, rcfg, tol)
 
 
 # ---------------------------------------------------------------------------
@@ -238,12 +308,17 @@ def _as_refine_config(refine) -> RefineConfig:
 
 def iterative_refine(a, b, cfg: PrecisionConfig | None = None,
                      refine: int | RefineConfig | None = None, *,
-                     l=None) -> RefineResult:
+                     l=None, col_tol=None) -> RefineResult:
     """Factor once in ``cfg``'s ladder, refine to ``refine.tol``.
 
     ``a`` is required here (the residual needs it) in the residual
     precision; pass a precomputed ``l`` to skip the factorization.
-    Dispatches on ``refine.method``: classic IR or GMRES-IR.
+    Dispatches on ``refine.method``: classic IR or GMRES-IR. The sweep
+    residual ``b - A x`` goes through :func:`repro.kernels.ops.residual`
+    — the fused Pallas kernel on TPU (or when ``cfg.kernel_impl``
+    forces it), the XLA oracle elsewhere. ``col_tol`` gives an (n, k)
+    ``b`` per-column tolerances overriding the scalar ``refine.tol``
+    (the serve scheduler's per-request accuracy targets).
     """
     cfg = cfg or PrecisionConfig()
     rcfg = _as_refine_config(refine)
@@ -252,23 +327,27 @@ def iterative_refine(a, b, cfg: PrecisionConfig | None = None,
     if l is None:
         l = cholesky(a, cfg)
     a_r = jnp.asarray(a, rdtype)
+    b_r = jnp.asarray(b, rdtype)
 
     def matvec(x):
         return a_r @ x
+
+    def resid(x):
+        return ops.residual(a_r, x, b_r, impl=cfg.kernel_impl)
 
     def base_solve(r):
         return solve_factored(l, r.astype(l.dtype), cfg).astype(rdtype)
 
     correct = scaled_solve(base_solve)
     # the initial solve is unscaled so refine=0 reproduces cholesky_solve
-    x0 = base_solve(jnp.asarray(b, rdtype))
+    x0 = base_solve(b_r)
     run = gmres_operator if rcfg.method == "gmres" else refine_operator
-    return run(matvec, correct, jnp.asarray(b, rdtype), x0, rcfg)
+    return run(matvec, correct, b_r, x0, rcfg, resid=resid, tol=col_tol)
 
 
 def gmres_refine(a, b, cfg: PrecisionConfig | None = None,
                  refine: int | RefineConfig | None = None, *,
-                 l=None) -> RefineResult:
+                 l=None, col_tol=None) -> RefineResult:
     """GMRES-IR convenience wrapper (``method`` forced to ``"gmres"``)."""
     rcfg = dataclasses.replace(_as_refine_config(refine), method="gmres")
-    return iterative_refine(a, b, cfg, rcfg, l=l)
+    return iterative_refine(a, b, cfg, rcfg, l=l, col_tol=col_tol)

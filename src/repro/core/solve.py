@@ -32,12 +32,17 @@ def cholesky_solve(a, b, cfg: PrecisionConfig | None = None, *, l=None,
     the refinement precision, recovering working-precision accuracy.
     Requires ``a``. Returns just ``x`` (use :func:`refine_solve` for the
     full :class:`~repro.core.refine.RefineResult`).
+
+    NOTE: with ``refine`` the result comes back in the RESIDUAL precision
+    (f32, or f64 under x64), NOT ``b.dtype`` — casting a refined solution
+    back to an f16/bf16 RHS dtype would throw away every digit the sweeps
+    just paid for. Callers that need the narrow dtype (none in-tree: the
+    K-FAC whitening path and the serve engine both consume the wide
+    result) must downcast explicitly.
     """
     cfg = cfg or PrecisionConfig()
     if refine is not None:
-        res = refine_solve(a, b, cfg, refine=refine, l=l)
-        x = res.x.astype(b.dtype)
-        return x
+        return refine_solve(a, b, cfg, refine=refine, l=l).x
 
     vec = b.ndim == 1
     if vec:
@@ -66,15 +71,19 @@ def solve_factored(l, b, cfg: PrecisionConfig | None = None):
 
 
 def refine_solve(a, b, cfg: PrecisionConfig | None = None, *,
-                 refine=None, l=None):
+                 refine=None, l=None, col_tol=None):
     """Accuracy-targeted solve: cheap-ladder factorization + iterative
     refinement. Returns the full :class:`~repro.core.refine.RefineResult`
-    (solution, residual history, sweeps, converged). ``refine`` is an int
-    sweep bound or a :class:`~repro.core.refine.RefineConfig` (choosing
-    classic IR or GMRES-IR); ``None`` means the default 5-sweep IR.
+    (solution, residual history, sweeps, converged — per column for an
+    (n, k) ``b``). ``refine`` is an int sweep bound or a
+    :class:`~repro.core.refine.RefineConfig` (choosing classic IR or
+    GMRES-IR); ``None`` means the default 5-sweep IR. ``col_tol`` sets
+    per-column tolerances for multi-RHS blocks (the serve scheduler's
+    per-request accuracy targets).
     """
     from repro.core import refine as _refine  # circular-import guard
-    return _refine.iterative_refine(a, b, cfg, refine, l=l)
+    return _refine.iterative_refine(a, b, cfg, refine, l=l,
+                                    col_tol=col_tol)
 
 
 def logdet(l):

@@ -5,6 +5,7 @@ Modules:
   potrf.py  — leaf Cholesky + leaf triangular inverse (in-VMEM blocked)
   trsm.py   — leaf triangular solve (inverse-then-GEMM, MXU friendly)
   syrk.py   — leaf SYRK + beyond-paper triangular-packed fused SYRK
+  residual.py — fused IR residual r = b - A x (refinement sweep hot path)
   flash.py  — causal GQA flash-attention (online softmax in VMEM)
   ops.py    — public dispatching API (pallas / interpret / jnp)
   ref.py    — pure-jnp oracles (ground truth for tests, CPU exec path)

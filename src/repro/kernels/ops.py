@@ -20,6 +20,7 @@ import jax.numpy as jnp
 
 from repro.kernels import qgemm as _qgemm
 from repro.kernels import potrf as _potrf
+from repro.kernels import residual as _residual
 from repro.kernels import syrk as _syrk
 from repro.kernels import trsm as _trsm
 from repro.kernels import ref as _ref
@@ -77,6 +78,21 @@ def trsm(b, l, *, side="right", trans=True, impl=None):
         return qgemm(linv.T.astype(b.dtype), b, impl=impl,
                      out_dtype=b.dtype)
     raise NotImplementedError(f"trsm side={side} trans={trans}")
+
+
+def residual(a, x, b, *, impl=None, **tiles):
+    """Fused IR residual r = b - a @ x (the refinement sweep hot path).
+
+    f64 operands always take the jnp oracle: the MXU has no f64 and the
+    fused kernel's f32 accumulator would silently eat the extra digits.
+    """
+    impl = resolve_impl(impl)
+    if impl == "jnp" or any(jnp.dtype(v.dtype) == jnp.float64
+                            for v in (a, x, b)):
+        return _ref.residual_ref(a, x, b)
+    return _residual.residual_fused(a, x, b,
+                                    interpret=(impl == "interpret"),
+                                    **tiles)
 
 
 def syrk(c, a, scale=1.0, beta=1.0, *, packed=False, impl=None, **tiles):

@@ -83,6 +83,14 @@ def trsm_ref(b, l, *, side="right", trans=True):
     raise NotImplementedError(f"trsm side={side} trans={trans}")
 
 
+def residual_ref(a, x, b):
+    """IR residual oracle: r = b - a @ x with f32 accumulation (f64 if
+    any operand is f64). ``x``/``b`` may be (n,) or (n, k) multi-RHS."""
+    ad = _acc_dtype(a, x, b)
+    acc = jnp.dot(a, x, preferred_element_type=ad)
+    return (b.astype(ad) - acc).astype(b.dtype)
+
+
 def syrk_ref(c, a, *, alpha=1.0, beta=1.0, scale=1.0):
     """SYRK oracle: lower(C) <- beta*C + alpha*scale*(A A^T); upper kept.
 

@@ -1,2 +1,5 @@
 from repro.serve.engine import (SolveInfo, SolverEngine,  # noqa: F401
-                                generate, prefill_step, serve_step)
+                                generate, matrix_fingerprint, prefill_step,
+                                serve_step)
+from repro.serve.scheduler import (BatchScheduler,  # noqa: F401
+                                   SolveRequest)

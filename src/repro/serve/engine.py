@@ -20,11 +20,13 @@ requests that share a matrix.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.precision import PAPER_CONFIGS, PrecisionConfig
 from repro.core.refine import RefineConfig, RefineResult
@@ -77,6 +79,28 @@ def generate(params, prompt_batch, cfg: ModelConfig, *, n_tokens: int,
 # ---------------------------------------------------------------------------
 # accuracy-targeted SPD solve serving
 # ---------------------------------------------------------------------------
+def matrix_fingerprint(a, samples: int = 8):
+    """Cheap identity check for a cached factor: shape, dtype, trace and
+    a strided sample of the diagonal and first row.
+
+    O(n) device work and a ~2*samples-float transfer — negligible next
+    to the O(n^3) factorization it guards. Collisions require two
+    matrices agreeing on every sampled entry AND the trace, which no
+    real request stream produces by accident; the failure it prevents
+    (a reused ``cache_key`` silently solving against a stale factor) was
+    an actual correctness bug.
+    """
+    a = jnp.asarray(a)
+    n = a.shape[0]
+    stride = max(1, n // samples)
+    probe = jnp.concatenate([
+        jnp.diagonal(a)[::stride].ravel(),
+        a[0, ::stride].ravel(),
+        jnp.trace(a)[None],
+    ]).astype(jnp.float32)
+    return (a.shape, str(a.dtype), np.asarray(probe).tobytes())
+
+
 @dataclasses.dataclass
 class SolveInfo:
     """Per-request serving metadata returned next to the solution."""
@@ -88,6 +112,8 @@ class SolveInfo:
     converged: bool
     target_digits: float        # digits actually targeted (post-clamp)
     factor_cached: bool         # True if the factor was reused
+    batch_size: int = 1         # requests sharing this refine call
+    batch_index: int = 0        # this request's slot in the batch
 
 
 class SolverEngine:
@@ -103,14 +129,26 @@ class SolverEngine:
 
     Factors are cached under a caller-provided ``cache_key`` so request
     streams that share a matrix (GP hyperparameter sweeps, K-FAC-style
-    repeated solves) pay the O(n^3) factorization once.
+    repeated solves) pay the O(n^3) factorization once. Each cached
+    factor carries a :func:`matrix_fingerprint` of the matrix it was
+    computed from — a reused key with a DIFFERENT matrix forces
+    refactorization instead of silently solving against a stale factor
+    — and the cache is LRU-bounded by ``max_cached_factors`` so it
+    cannot grow without limit under production traffic.
+
+    :meth:`solve_batched` is the cross-request entry point the
+    :class:`~repro.serve.scheduler.BatchScheduler` uses: it stacks many
+    RHS sharing a factor into ONE multi-RHS refine call with per-column
+    accuracy targets, so easy requests stop sweeping while hard
+    neighbors continue.
     """
 
     #: digits attainable by the residual precision (with ~1 digit margin)
     _FLOOR_DIGITS = {"f32": 7.0, "f64": 14.0}
 
     def __init__(self, ladder: str | PrecisionConfig = "bf16_f32", *,
-                 max_sweeps: int = 10, gmres_restart: int = 16):
+                 max_sweeps: int = 10, gmres_restart: int = 16,
+                 max_cached_factors: int = 16):
         if isinstance(ladder, str):
             self.ladder_name = ladder
             self.cfg = PAPER_CONFIGS[ladder]
@@ -119,43 +157,111 @@ class SolverEngine:
             self.cfg = ladder
         self.max_sweeps = max_sweeps
         self.gmres_restart = gmres_restart
-        self._factors: dict = {}
+        assert max_cached_factors >= 1, max_cached_factors
+        self.max_cached_factors = max_cached_factors
+        #: cache_key -> (fingerprint, factor), most-recently-used last
+        self._factors: collections.OrderedDict = collections.OrderedDict()
 
     def _clamp(self, target_digits: float) -> float:
         rname = "f64" if jax.config.jax_enable_x64 else "f32"
         return min(float(target_digits), self._FLOOR_DIGITS[rname])
 
-    def factor(self, a, cache_key=None):
-        """Factorize (or fetch the cached factor for) ``a``."""
-        if cache_key is not None and cache_key in self._factors:
-            return self._factors[cache_key], True
+    def factor(self, a, cache_key=None, *, fingerprint=None):
+        """Factorize (or fetch the cached factor for) ``a``.
+
+        A cache hit is only served when the stored fingerprint matches
+        ``a`` — a reused key with new matrix data refactorizes (and
+        replaces the stale entry) rather than returning a factor of some
+        other matrix. Insertions evict least-recently-used entries
+        beyond ``max_cached_factors``. ``fingerprint`` lets callers that
+        already fingerprinted ``a`` (the scheduler does, at submit time)
+        skip the redundant O(n) device round-trip.
+        """
+        if cache_key is None:
+            return cholesky(a, self.cfg), False
+        fp = fingerprint if fingerprint is not None else matrix_fingerprint(a)
+        hit = self._factors.get(cache_key)
+        if hit is not None and hit[0] == fp:
+            self._factors.move_to_end(cache_key)
+            return hit[1], True
         l = cholesky(a, self.cfg)
-        if cache_key is not None:
-            self._factors[cache_key] = l
+        self._factors[cache_key] = (fp, l)
+        self._factors.move_to_end(cache_key)
+        while len(self._factors) > self.max_cached_factors:
+            self._factors.popitem(last=False)
         return l, False
 
     def evict(self, cache_key):
         self._factors.pop(cache_key, None)
+
+    def cached_keys(self):
+        """Cache keys currently held, least-recently-used first."""
+        return list(self._factors)
 
     def solve(self, a, b, *, target_digits: float = 6.0,
               method: str = "ir", cache_key=None):
         """Solve A x = b to ``target_digits``; returns ``(x, SolveInfo)``.
 
         ``method="gmres"`` requests GMRES-IR for ill-conditioned systems
-        where classic IR stalls.
+        where classic IR stalls. ``b`` may be (n,) or (n, k); for a
+        multi-RHS ``b`` the SolveInfo aggregates across columns (max
+        sweeps/residual, all-converged).
         """
-        digits = self._clamp(target_digits)
+        xs, infos = self.solve_batched(a, [b], target_digits=target_digits,
+                                       method=method, cache_key=cache_key)
+        return xs[0], infos[0]
+
+    def solve_batched(self, a, bs, *, target_digits=6.0,
+                      method: str = "ir", cache_key=None,
+                      fingerprint=None):
+        """Solve A x_i = b_i for a batch of RHS sharing one factor.
+
+        ``bs`` is a sequence of (n,) vectors and/or (n, k_i) blocks (one
+        per request); ``target_digits`` is a scalar or a per-request
+        sequence. All RHS are stacked into a single multi-RHS refine
+        call whose per-column tolerances encode each request's target,
+        so converged columns freeze while slow ones keep sweeping.
+        Returns ``(xs, infos)`` aligned with ``bs``; each request's x
+        keeps its input arity (vector in, vector out) in the residual
+        precision.
+        """
+        bs = [jnp.asarray(b) for b in bs]
+        assert bs, "solve_batched needs at least one RHS"
+        n = bs[0].shape[0]
+        for b in bs:
+            assert b.ndim in (1, 2) and b.shape[0] == n, b.shape
+        cols = [1 if b.ndim == 1 else b.shape[1] for b in bs]
+        if np.isscalar(target_digits):
+            target_digits = [target_digits] * len(bs)
+        assert len(target_digits) == len(bs), (len(target_digits), len(bs))
+        digits = [self._clamp(d) for d in target_digits]
+        col_tol = np.repeat([10.0 ** -d for d in digits], cols)
         rcfg = RefineConfig(max_sweeps=self.max_sweeps,
-                            tol=10.0 ** -digits, method=method,
+                            tol=float(col_tol.min()), method=method,
                             gmres_restart=self.gmres_restart)
-        l, cached = self.factor(a, cache_key)
-        res: RefineResult = refine_solve(a, b, self.cfg, refine=rcfg, l=l)
-        info = SolveInfo(ladder=self.ladder_name, method=method,
-                         sweeps=int(res.iterations),
-                         residual=float(res.residual),
-                         converged=bool(res.converged),
-                         target_digits=digits, factor_cached=cached)
-        return res.x, info
+        l, cached = self.factor(a, cache_key, fingerprint=fingerprint)
+        bmat = jnp.concatenate(
+            [b[:, None] if b.ndim == 1 else b for b in bs], axis=1)
+        res: RefineResult = refine_solve(a, bmat, self.cfg, refine=rcfg,
+                                         l=l, col_tol=jnp.asarray(col_tol))
+        sweeps = np.atleast_1d(np.asarray(res.iterations))
+        resid = np.atleast_1d(np.asarray(res.residual))
+        conv = np.atleast_1d(np.asarray(res.converged))
+        xs, infos = [], []
+        off = 0
+        for i, (b, k) in enumerate(zip(bs, cols)):
+            x = res.x[:, off:off + k]
+            xs.append(x[:, 0] if b.ndim == 1 else x)
+            sl = slice(off, off + k)
+            infos.append(SolveInfo(
+                ladder=self.ladder_name, method=method,
+                sweeps=int(sweeps[sl].max()),
+                residual=float(resid[sl].max()),
+                converged=bool(conv[sl].all()),
+                target_digits=digits[i], factor_cached=cached,
+                batch_size=len(bs), batch_index=i))
+            off += k
+        return xs, infos
 
 
 def _pick(logits, cfg: ModelConfig, temperature, rng, i):

@@ -1,0 +1,194 @@
+"""Cross-request batching scheduler for accuracy-targeted SPD solves.
+
+Production solve traffic is bursty and highly redundant: GP
+hyperparameter sweeps, K-FAC-style optimizers and ranking backends fire
+many concurrent requests against the SAME matrix. Solving them one at a
+time pays a full refinement loop — O(n^2) GEMV sweeps plus a dispatch
+round-trip — per request. The :class:`BatchScheduler` instead queues
+requests, groups the ones that can legally share a factor (same
+``cache_key`` AND the same matrix by :func:`~repro.serve.engine
+.matrix_fingerprint` AND the same method), stacks their right-hand sides
+into one multi-RHS refine call (O(n^2) GEMM sweeps — MXU/BLAS3-shaped
+instead of k GEMVs), and splits the per-column results back into
+per-request ``(x, SolveInfo)`` pairs.
+
+Per-request accuracy targets survive batching: the stacked call carries
+per-column tolerances, and the refinement loop's per-column convergence
+masks freeze easy columns while hard neighbors keep sweeping — a batch
+is never slower in sweeps than its hardest member, and never burns
+sweeps on its easiest.
+
+Ordering guarantees (tested in tests/test_serve.py):
+
+* ``drain()`` returns a result for EVERY pending request, keyed by the
+  id that ``submit`` returned.
+* Groups are processed in order of their first-submitted request, and
+  within a group requests keep submission order (``SolveInfo
+  .batch_index`` records each request's slot).
+* Groups are chunked to ``max_batch`` columns per refine call, in
+  submission order.
+
+This is a host-side loop by design (requests arrive from Python-land
+callers); the jit boundary is the stacked refine call inside
+``SolverEngine.solve_batched``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import weakref
+from typing import Any
+
+import jax.numpy as jnp
+
+from repro.serve.engine import SolveInfo, SolverEngine, matrix_fingerprint
+
+
+@dataclasses.dataclass
+class SolveRequest:
+    """One queued solve: A x = b to ``target_digits`` digits."""
+
+    request_id: int
+    a: Any
+    b: Any
+    target_digits: float
+    method: str
+    cache_key: Any
+    n_cols: int                 # 1 for a vector b, k for an (n, k) block
+
+
+class BatchScheduler:
+    """Request loop that batches solves sharing a factor.
+
+    ``submit`` enqueues and returns a request id; ``drain`` processes
+    the whole queue and returns ``{request_id: (x, SolveInfo)}``. The
+    ``engine`` owns the factor cache, so batching composes with factor
+    reuse ACROSS drains: the first drain factorizes once per distinct
+    matrix, later drains hit the fingerprint-checked LRU cache.
+    """
+
+    def __init__(self, engine: SolverEngine | None = None, *,
+                 max_batch: int = 32):
+        assert max_batch >= 1, max_batch
+        self.engine = engine if engine is not None else SolverEngine()
+        self.max_batch = max_batch
+        self._queue: list[SolveRequest] = []
+        self._fingerprints: dict[int, Any] = {}   # request_id -> fp
+        self._next_id = 0
+        #: results completed before a failed drain raised; merged into
+        #: (and cleared by) the next drain()'s return value
+        self._stashed: dict[int, tuple[Any, SolveInfo]] = {}
+        #: requests abandoned by the last failed drain (the batch whose
+        #: solve raised) — callers inspect these to report/resubmit;
+        #: cleared by the next drain
+        self.failed: list[SolveRequest] = []
+        #: id(a) -> (weakref(a), fingerprint): burst traffic against one
+        #: shared matrix fingerprints it once, not once per submit
+        self._fp_memo: dict[int, tuple[Any, Any]] = {}
+
+    def __len__(self) -> int:
+        return len(self._queue)
+
+    def submit(self, a, b, *, target_digits: float = 6.0,
+               method: str = "ir", cache_key=None) -> int:
+        """Enqueue a solve; returns the id ``drain()`` keys results by."""
+        b = jnp.asarray(b)
+        assert b.ndim in (1, 2), b.shape
+        assert method in ("ir", "gmres"), method
+        rid = self._next_id
+        self._next_id += 1
+        req = SolveRequest(rid, a, b, float(target_digits), method,
+                           cache_key, 1 if b.ndim == 1 else b.shape[1])
+        # fingerprint at submit time so grouping can never batch two
+        # different matrices that happen to share a cache_key
+        self._fingerprints[rid] = self._fingerprint_of(a)
+        self._queue.append(req)
+        return rid
+
+    def _fingerprint_of(self, a):
+        """Memoized matrix_fingerprint: the O(n) device reduction + host
+        sync runs once per distinct matrix object, not once per submit.
+        The weakref guard makes id() reuse after gc harmless."""
+        key = id(a)
+        hit = self._fp_memo.get(key)
+        if hit is not None and hit[0]() is a:
+            return hit[1]
+        fp = matrix_fingerprint(a)
+        try:
+            if len(self._fp_memo) > 64:        # drop dead refs, stay small
+                self._fp_memo = {k: v for k, v in self._fp_memo.items()
+                                 if v[0]() is not None}
+            self._fp_memo[key] = (weakref.ref(a), fp)
+        except TypeError:                      # un-weakref-able input
+            pass
+        return fp
+
+    def _group_key(self, req: SolveRequest):
+        return (req.cache_key, self._fingerprints[req.request_id],
+                req.method)
+
+    def drain(self) -> dict[int, tuple[Any, SolveInfo]]:
+        """Solve everything queued; returns ``{request_id: (x, info)}``.
+
+        Exception-safe: if a batch fails (e.g. a client submitted a
+        non-SPD matrix and the factorization raised), the exception
+        propagates, but no other work is lost — results completed
+        before the failure are stashed and returned by the NEXT drain,
+        requests not yet attempted go back on the queue in submission
+        order, and the failing batch's requests land in ``self.failed``
+        for the caller to report or resubmit (they are NOT re-queued:
+        retrying a deterministically failing batch would wedge every
+        subsequent drain).
+        """
+        queue, self._queue = self._queue, []
+        groups: list[list[SolveRequest]] = []
+        index: dict[Any, int] = {}
+        for req in queue:                       # FIFO by first arrival
+            key = self._group_key(req)
+            if key in index:
+                groups[index[key]].append(req)
+            else:
+                index[key] = len(groups)
+                groups.append([req])
+        results, self._stashed = self._stashed, {}
+        self.failed = []
+        in_flight: list[SolveRequest] = []
+        try:
+            for members in groups:
+                for chunk in self._chunks(members):
+                    fp = self._fingerprints[chunk[0].request_id]
+                    in_flight = chunk          # blamed if the solve raises
+                    xs, infos = self.engine.solve_batched(
+                        chunk[0].a, [r.b for r in chunk],
+                        target_digits=[r.target_digits for r in chunk],
+                        method=chunk[0].method,
+                        cache_key=chunk[0].cache_key, fingerprint=fp)
+                    in_flight = []
+                    for req, x, info in zip(chunk, xs, infos):
+                        results[req.request_id] = (x, info)
+                        self._fingerprints.pop(req.request_id, None)
+        except BaseException:
+            # only a chunk whose solve actually raised is abandoned; an
+            # interrupt between chunks re-queues everything unprocessed
+            self.failed = list(in_flight)
+            dropped = {r.request_id for r in in_flight}
+            for rid in dropped:
+                self._fingerprints.pop(rid, None)
+            self._stashed = results
+            self._queue = [r for r in queue
+                           if r.request_id not in results
+                           and r.request_id not in dropped] + self._queue
+            raise
+        return results
+
+    def _chunks(self, members: list[SolveRequest]):
+        """Split a group so no refine call exceeds ``max_batch`` columns."""
+        chunk: list[SolveRequest] = []
+        width = 0
+        for req in members:
+            if chunk and width + req.n_cols > self.max_batch:
+                yield chunk
+                chunk, width = [], 0
+            chunk.append(req)
+            width += req.n_cols
+        if chunk:
+            yield chunk

@@ -41,6 +41,45 @@ def test_qgemm_epilogue(trans_b, beta):
                                rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.parametrize("n,k", [(128, 1), (256, 4), (300, 3), (129, 130),
+                                 (512, 8)])
+def test_residual_fused(n, k):
+    a = _rand((n, n))
+    x = _rand((n, k))
+    b = _rand((n, k))
+    got = ops.residual(a, x, b, impl="interpret")
+    want = ref.residual_ref(a, x, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-3)
+
+
+def test_residual_fused_vector():
+    n = 200
+    a = _rand((n, n))
+    x = _rand((n,))
+    b = _rand((n,))
+    got = ops.residual(a, x, b, impl="interpret")
+    assert got.shape == (n,)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(ref.residual_ref(a, x, b)),
+                               rtol=2e-4, atol=2e-3)
+
+
+def test_residual_f64_routes_to_oracle():
+    """f64 residuals (the x64 accuracy path) must bypass the fused
+    kernel's f32 accumulator bit-for-bit."""
+    from jax.experimental import enable_x64
+    with enable_x64():
+        n = 96
+        a = jnp.asarray(RNG.standard_normal((n, n)))
+        x = jnp.asarray(RNG.standard_normal(n))
+        b = jnp.asarray(RNG.standard_normal(n))
+        got = ops.residual(a, x, b, impl="interpret")
+        assert got.dtype == jnp.float64
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.asarray(ref.residual_ref(a, x, b)))
+
+
 @pytest.mark.parametrize("n", [128, 256, 384, 512])
 def test_potrf_leaf(n):
     m = _rand((n, n))

@@ -1,5 +1,6 @@
 """Serving engine tests: greedy generate matches teacher-forced argmax,
-cache padding, batched audio generation."""
+cache padding, batched audio generation; SolverEngine factor-cache
+correctness (fingerprint, LRU) and BatchScheduler batching/ordering."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -7,7 +8,7 @@ import pytest
 
 from repro import configs
 from repro.models import transformer as T
-from repro.serve import engine
+from repro.serve import BatchScheduler, SolverEngine, engine
 
 
 def _greedy_reference(params, cfg, prompt, n_tokens, extra=None):
@@ -49,6 +50,175 @@ def test_generate_audio_shapes():
                           max_len=16)
     assert out.shape == (2, 5, 4)
     assert (np.asarray(out) < cfg.vocab).all()
+
+
+# ---------------------------------------------------------------------------
+# SolverEngine factor cache + BatchScheduler
+# ---------------------------------------------------------------------------
+def _spd(n, seed=0):
+    rng = np.random.default_rng(seed)
+    m = rng.uniform(-1, 1, (n, n))
+    return (m @ m.T + n * np.eye(n)).astype(np.float32)
+
+
+def _rhs(a, seed):
+    n = a.shape[0]
+    return (a @ np.random.default_rng(seed).standard_normal(n)).astype(
+        np.float32)
+
+
+def test_factor_cache_detects_stale_key():
+    """Regression: a reused cache_key with DIFFERENT matrix data used to
+    silently solve against the stale factor. The fingerprint must force
+    refactorization (and the result must be accurate for the new A)."""
+    n = 256
+    a1, a2 = _spd(n, seed=1), _spd(n, seed=2)
+    b2 = _rhs(a2, seed=3)
+    eng = SolverEngine("f16_f32", max_sweeps=8)
+    eng.solve(a1, _rhs(a1, seed=4), cache_key="shared")
+    x, info = eng.solve(a2, b2, target_digits=6.0, cache_key="shared")
+    assert not info.factor_cached          # stale entry was NOT reused
+    rr = np.linalg.norm(a2 @ np.asarray(x) - b2) / np.linalg.norm(b2)
+    assert rr <= 1e-6, rr
+    # and the replaced entry now serves a2
+    _, info2 = eng.solve(a2, b2, cache_key="shared")
+    assert info2.factor_cached
+
+
+def test_factor_cache_lru_bound():
+    n = 192
+    mats = [_spd(n, seed=s) for s in range(4)]
+    eng = SolverEngine("f16_f32", max_sweeps=6, max_cached_factors=2)
+    for i, a in enumerate(mats[:3]):
+        eng.solve(a, _rhs(a, seed=i), cache_key=f"k{i}")
+    assert eng.cached_keys() == ["k1", "k2"]   # k0 evicted, LRU first
+    _, info = eng.solve(mats[0], _rhs(mats[0], seed=9), cache_key="k0")
+    assert not info.factor_cached              # k0 had to refactorize
+    # a hit refreshes recency: touch k2, then insert k3 -> k0 evicted
+    eng.solve(mats[2], _rhs(mats[2], seed=10), cache_key="k2")
+    eng.solve(mats[3], _rhs(mats[3], seed=11), cache_key="k3")
+    assert eng.cached_keys() == ["k2", "k3"]
+
+
+def test_scheduler_batches_requests_sharing_a_factor():
+    n = 256
+    a, a_other = _spd(n, seed=5), _spd(n, seed=6)
+    eng = SolverEngine("f16_f32", max_sweeps=8)
+    sch = BatchScheduler(eng, max_batch=8)
+    bs = [_rhs(a, seed=10 + i) for i in range(4)]
+    ids = [sch.submit(a, b, target_digits=6.0, cache_key="k")
+           for b in bs]
+    b_other = _rhs(a_other, seed=20)
+    id_other = sch.submit(a_other, b_other, cache_key="other")
+    assert len(sch) == 5
+    out = sch.drain()
+    assert len(sch) == 0 and set(out) == {*ids, id_other}
+    for i, (rid, b) in enumerate(zip(ids, bs)):
+        x, info = out[rid]
+        rr = np.linalg.norm(a @ np.asarray(x) - b) / np.linalg.norm(b)
+        assert rr <= 1e-6, rr                   # each request got ITS x
+        assert info.batch_size == 4             # all four rode one call
+        assert info.batch_index == i            # in submission order
+        assert info.converged
+    x, info = out[id_other]
+    assert info.batch_size == 1
+    rr = (np.linalg.norm(a_other @ np.asarray(x) - b_other)
+          / np.linalg.norm(b_other))
+    assert rr <= 1e-6, rr
+    # a second drain against the same key reuses the cached factor
+    rid2 = sch.submit(a, bs[0], cache_key="k")
+    assert out[ids[0]][1].factor_cached is False
+    assert sch.drain()[rid2][1].factor_cached is True
+
+
+def test_scheduler_never_batches_mismatched_matrices():
+    """Two different matrices submitted under the SAME cache_key in one
+    drain must land in different batches (fingerprint grouping), and
+    both must come back accurate."""
+    n = 192
+    a1, a2 = _spd(n, seed=7), _spd(n, seed=8)
+    b1, b2 = _rhs(a1, seed=1), _rhs(a2, seed=2)
+    sch = BatchScheduler(SolverEngine("f16_f32", max_sweeps=8))
+    i1 = sch.submit(a1, b1, cache_key="k")
+    i2 = sch.submit(a2, b2, cache_key="k")
+    out = sch.drain()
+    assert out[i1][1].batch_size == 1 and out[i2][1].batch_size == 1
+    for a, b, rid in [(a1, b1, i1), (a2, b2, i2)]:
+        x = np.asarray(out[rid][0])
+        assert np.linalg.norm(a @ x - b) / np.linalg.norm(b) <= 1e-6
+
+
+def test_scheduler_respects_max_batch_and_mixed_targets():
+    n = 256
+    a = _spd(n, seed=11)
+    eng = SolverEngine("f16_f32", max_sweeps=8)
+    sch = BatchScheduler(eng, max_batch=3)
+    targets = [2.0, 6.0, 2.0, 6.0, 2.0]
+    ids = [sch.submit(a, _rhs(a, seed=30 + i), target_digits=t,
+                      cache_key="k")
+           for i, t in enumerate(targets)]
+    out = sch.drain()
+    sizes = [out[r][1].batch_size for r in ids]
+    assert sizes == [3, 3, 3, 2, 2]            # chunked at max_batch
+    for rid, t in zip(ids, targets):
+        info = out[rid][1]
+        assert info.converged and info.residual <= 10.0 ** -t
+        assert info.target_digits == t         # per-request target kept
+
+
+def test_scheduler_drain_failure_preserves_other_requests():
+    """A failing batch (non-SPD matrix) must not lose other work: solved
+    results come back from the next drain, unattempted requests stay
+    queued, and the failing batch lands in scheduler.failed."""
+    n = 128
+    a = _spd(n, seed=17)
+    bad = -np.eye(n, dtype=np.float32)          # not SPD: cholesky -> nan
+    sch = BatchScheduler(SolverEngine("f16_f32", max_sweeps=6))
+    ok_id = sch.submit(a, _rhs(a, seed=1), cache_key="good")
+    bad_id = sch.submit(bad, np.ones(n, np.float32), cache_key="bad")
+    later_id = sch.submit(a, _rhs(a, seed=2), cache_key="good2")
+
+    class Boom(RuntimeError):
+        pass
+
+    orig = sch.engine.solve_batched
+
+    def exploding(a_, bs, **kw):                # deterministic failure
+        if kw.get("cache_key") == "bad":
+            raise Boom("not SPD")
+        return orig(a_, bs, **kw)
+
+    sch.engine.solve_batched = exploding
+    with pytest.raises(Boom):
+        sch.drain()
+    assert [r.request_id for r in sch.failed] == [bad_id]
+    assert [r.request_id for r in sch._queue] == [later_id]
+    out = sch.drain()                           # stashed + re-queued work
+    assert set(out) == {ok_id, later_id}
+    for rid, seed, mat in [(ok_id, 1, a), (later_id, 2, a)]:
+        x, info = out[rid]
+        b = _rhs(mat, seed=seed)
+        rr = np.linalg.norm(mat @ np.asarray(x) - b) / np.linalg.norm(b)
+        assert rr <= 1e-6 and info.converged
+
+
+def test_scheduler_multi_column_request():
+    """(n, k) block requests batch next to vector requests and come back
+    with their input arity."""
+    n = 192
+    a = _spd(n, seed=13)
+    blk = np.stack([_rhs(a, seed=40), _rhs(a, seed=41)], axis=1)
+    vec = _rhs(a, seed=42)
+    sch = BatchScheduler(SolverEngine("f16_f32", max_sweeps=8))
+    i_blk = sch.submit(a, blk, cache_key="k")
+    i_vec = sch.submit(a, vec, cache_key="k")
+    out = sch.drain()
+    x_blk, info_blk = out[i_blk]
+    x_vec, info_vec = out[i_vec]
+    assert x_blk.shape == (n, 2) and x_vec.shape == (n,)
+    assert info_blk.batch_size == info_vec.batch_size == 2
+    rr = np.linalg.norm(a @ np.asarray(x_blk) - blk) / np.linalg.norm(blk)
+    assert rr <= 1e-5 and info_blk.converged and info_vec.converged
 
 
 def test_generate_sampling_reproducible():
