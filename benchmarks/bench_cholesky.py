@@ -5,16 +5,26 @@ GFLOP/s = (n^3/3) / t.
 Derived: v5e-modeled effective TFLOP/s and speedup over the uniform-f32
 tree (census compute+memory model), Fig. 6's "peak-utilization is not
 the right objective" trade-off reproduced as model numbers.
+
+``run_engines`` (PR 3) races the flat blocked executor against the tree
+recursion on identical ladders — wall clock plus traced jaxpr equation
+counts (the dispatch DAG each engine hands XLA) — and writes the
+``BENCH_cholesky.json`` artifact at the repo root that CI's
+blocked-vs-tree perf gate reads.
 """
 from __future__ import annotations
 
 import functools
+import json
+import os
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks.util import emit, model_time_s, spd_matrix, timeit
 from repro.core import PrecisionConfig, census_potrf, cholesky
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 CONFIGS = {
     "f32": PrecisionConfig(levels=("f32",), leaf=128),
@@ -55,5 +65,39 @@ def run(sizes=(512, 1024, 2048)):
                  f"cpu_speedup={t_base / t:.2f}")
 
 
+def run_engines(sizes=(512, 2048), ladder=("bf16", "f32"), leaf=256,
+                json_path=None):
+    """Tree vs blocked engine race on one ladder: wall clock, speedup,
+    and jaxpr equation counts. Writes ``BENCH_cholesky.json`` (repo
+    root) for CI's perf gate: blocked slower than tree at n >= 2048 is
+    a regression."""
+    rows = []
+    for n in sizes:
+        a = spd_matrix(n)
+        row = {"n": n, "ladder": "_".join(ladder), "leaf": leaf}
+        for eng in ("tree", "blocked"):
+            cfg = PrecisionConfig(levels=ladder, leaf=leaf, engine=eng)
+            fn = functools.partial(cholesky, cfg=cfg)
+            # the tree's concat-heavy allocation pattern is noisy on
+            # shared CI runners: median over more iters than the default
+            t = timeit(jax.jit(fn), a, warmup=3, iters=9)
+            eqns = len(jax.make_jaxpr(fn)(jnp.asarray(a)).eqns)
+            row[f"us_{eng}"] = round(t, 1)
+            row[f"eqns_{eng}"] = eqns
+            emit(f"potrf_engine_{eng}_n{n}", t, f"jaxpr_eqns={eqns}")
+        row["speedup_blocked_vs_tree"] = round(
+            row["us_tree"] / row["us_blocked"], 3)
+        emit(f"potrf_engine_speedup_n{n}", row["us_blocked"],
+             f"speedup_blocked_vs_tree={row['speedup_blocked_vs_tree']};"
+             f"eqns_tree={row['eqns_tree']};"
+             f"eqns_blocked={row['eqns_blocked']}")
+        rows.append(row)
+    path = json_path or os.path.join(_ROOT, "BENCH_cholesky.json")
+    with open(path, "w") as f:
+        json.dump({"bench": "cholesky_engines", "rows": rows}, f, indent=1)
+    return rows
+
+
 if __name__ == "__main__":
     run()
+    run_engines()

@@ -85,6 +85,9 @@ def main(argv=None) -> None:
         bench_syrk.run(sizes=(256,))
         bench_trsm.run(sizes=(256,))
         bench_cholesky.run(sizes=(256,))
+        # tree-vs-blocked engine race; writes BENCH_cholesky.json at the
+        # repo root (CI's perf gate asserts blocked >= tree at n >= 2048)
+        bench_cholesky.run_engines(sizes=(512, 2048))
         bench_depth.run(sizes=(256, 1024, 4096))
         bench_portability.run(sizes=(256,))
         # bench_serve is skipped in smoke mode: CI's bench-smoke job runs
@@ -93,6 +96,7 @@ def main(argv=None) -> None:
         bench_syrk.run()
         bench_trsm.run()
         bench_cholesky.run()
+        bench_cholesky.run_engines(sizes=(512, 2048, 4096))
         bench_depth.run()
         bench_portability.run()
         bench_serve.run()

@@ -9,30 +9,37 @@ Public API:
   census_*                            — structural FLOP/byte census
   distributed (module)                — shard_map block-panel Cholesky
 """
+from repro.core.blocked import (blocked_potrf, blocked_trsm_left,
+                                diag_tri_inv)
+from repro.core.plan import PrecisionPlan, TileInfo, build_plan
 from repro.core.precision import (DTYPES, PAPER_CONFIGS, PEAK_FLOPS, RMAX,
                                   PrecisionConfig)
 from repro.core.quantize import (dequant, dequant_int8, quant_block,
-                                 quant_int8)
+                                 quant_int8, storage_round)
 from repro.core.refine import (RefineConfig, RefineResult, gmres_refine,
                                iterative_refine, refine_operator,
                                refine_steps, scaled_solve)
-from repro.core.solve import (cholesky, cholesky_jit, cholesky_solve,
-                              cholesky_solve_jit, logdet, refine_solve,
-                              solve_factored)
-from repro.core.tree import (pad_spd, tree_potrf, tree_trsm, tree_trsm_left,
-                             tree_syrk)
+from repro.core.solve import (cholesky, cholesky_jit, cholesky_padded,
+                              cholesky_solve, cholesky_solve_jit, logdet,
+                              refine_solve, solve_factored)
+from repro.core.tree import (pad_factor, pad_spd, tree_potrf, tree_trsm,
+                             tree_trsm_left, tree_syrk)
 from repro.core.census import Census, census_potrf, census_syrk, census_trsm
 from repro.core.treematrix import (TreeSPD, storage_ratio,
                                    tree_potrf_packed)
 
 __all__ = [
     "DTYPES", "PAPER_CONFIGS", "PEAK_FLOPS", "RMAX", "PrecisionConfig",
+    "PrecisionPlan", "TileInfo", "build_plan",
+    "blocked_potrf", "blocked_trsm_left", "diag_tri_inv",
     "dequant", "dequant_int8", "quant_block", "quant_int8",
+    "storage_round",
     "RefineConfig", "RefineResult", "gmres_refine", "iterative_refine",
     "refine_operator", "refine_steps", "scaled_solve",
-    "cholesky", "cholesky_jit", "cholesky_solve", "cholesky_solve_jit",
-    "logdet", "refine_solve", "solve_factored",
-    "pad_spd", "tree_potrf", "tree_trsm", "tree_trsm_left", "tree_syrk",
+    "cholesky", "cholesky_jit", "cholesky_padded", "cholesky_solve",
+    "cholesky_solve_jit", "logdet", "refine_solve", "solve_factored",
+    "pad_factor", "pad_spd", "tree_potrf", "tree_trsm", "tree_trsm_left",
+    "tree_syrk",
     "Census", "census_potrf", "census_syrk", "census_trsm",
     "TreeSPD", "storage_ratio", "tree_potrf_packed",
 ]

@@ -1,0 +1,200 @@
+"""Static per-tile precision plan (the flat answer to the recursion).
+
+The tree solver (:mod:`repro.core.tree`) assigns precision implicitly:
+every recursion node computes its exposed GEMMs in ``levels[min(level,
+-1)]`` and each leaf rounds its tile at the level the recursion happens
+to reach. That assignment is a pure function of the *geometry* — matrix
+size, leaf size, bisection rule — so it can be computed once, with no
+array ops, as a per-tile table. This module walks the same recursion on
+index ranges only and emits, for every ``leaf x leaf`` tile ``(i, j)``:
+
+* ``level``    — the recursion level of the potrf node whose split
+  separates ``i`` from ``j`` (for diagonal tiles: the depth of the path
+  down to the singleton leaf). This is the level of every GEMM the tree
+  exposes on the tile, i.e. its *compute* precision — the paper's
+  "precision rises toward the diagonal" map.
+* ``store_level`` — the (deeper, >= ``level``) recursion level at which
+  the tree's TRSM leaf finally rounds the tile for storage.
+* ``quantize`` — whether the paper's per-block quantization applies at
+  the tile's compute level.
+
+:func:`build_plan` is cached per ``(n, cfg)``; the flat blocked executor
+(:mod:`repro.core.blocked`) looks tiles up here instead of re-deriving
+precision by recursing, and :meth:`PrecisionPlan.describe` renders the
+map for humans (README "Execution engines").
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+
+from repro.core.precision import DTYPES, NARROW, PrecisionConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class TileInfo:
+    """Static precision assignment of one leaf tile."""
+
+    level: int          # compute level (GEMM precision of the tile)
+    name: str           # dtype name at the compute level
+    store_level: int    # level whose dtype the tree stores the tile in
+    store_name: str     # dtype name at the storage level
+    quantize: bool      # per-block quantization applies at compute level
+
+    @property
+    def dtype(self):
+        return DTYPES[self.name]
+
+    @property
+    def store_dtype(self):
+        return DTYPES[self.store_name]
+
+
+def _needs_quant(name: str, cfg: PrecisionConfig) -> bool:
+    """Mirror of ``tree._round_to`` / ``cfg.needs_quant`` gating."""
+    if name == "int8":
+        return True
+    return cfg.quantize and name in NARROW
+
+
+def _split_tiles(nt: int) -> int:
+    """cfg.split in tile units: leaf-aligned bisection point."""
+    return max(1, nt // 2)
+
+
+class PrecisionPlan:
+    """Per-tile precision table for an ``n x n`` factorization.
+
+    ``levels``/``store_levels`` are symmetric ``(T, T)`` int arrays
+    (``T = n // leaf``); only the lower triangle is meaningful to the
+    executor but the mirror keeps lookups order-free.
+    """
+
+    def __init__(self, n: int, cfg: PrecisionConfig):
+        assert n % cfg.leaf == 0 and n > 0, (n, cfg.leaf)
+        self.n = n
+        self.cfg = cfg
+        self.leaf = cfg.leaf
+        self.ntiles = n // cfg.leaf
+        T = self.ntiles
+        comp = np.zeros((T, T), np.int32)
+        store = np.zeros((T, T), np.int32)
+        self._walk_potrf(comp, store, 0, T, 0)
+        # mirror so (i, j) and (j, i) agree
+        il = np.tril_indices(T, -1)
+        comp[il[1], il[0]] = comp[il]
+        store[il[1], il[0]] = store[il]
+        self.levels = comp
+        self.store_levels = store
+
+    # -- construction (mirrors tree.py's recursion on index ranges) --------
+    def _walk_potrf(self, comp, store, lo, hi, level):
+        if hi - lo == 1:
+            comp[lo, lo] = store[lo, lo] = level
+            return
+        mid = lo + _split_tiles(hi - lo)
+        self._walk_potrf(comp, store, lo, mid, level + 1)
+        # A21 block: every exposed GEMM runs at this node's level ...
+        comp[mid:hi, lo:mid] = level
+        # ... while the TRSM leaf that finally stores each column sits
+        # deeper, at level + (column bisection depth):
+        self._walk_trsm(store, mid, hi, lo, mid, level)
+        self._walk_potrf(comp, store, mid, hi, level + 1)
+
+    def _walk_trsm(self, store, rlo, rhi, clo, chi, level):
+        if chi - clo == 1:
+            store[rlo:rhi, clo] = level
+            return
+        cmid = clo + _split_tiles(chi - clo)
+        self._walk_trsm(store, rlo, rhi, clo, cmid, level + 1)
+        self._walk_trsm(store, rlo, rhi, cmid, chi, level + 1)
+
+    # -- lookups -----------------------------------------------------------
+    def level(self, i: int, j: int) -> int:
+        return int(self.levels[i, j])
+
+    def name(self, i: int, j: int) -> str:
+        return self.cfg.name_at(self.level(i, j))
+
+    def store_name(self, i: int, j: int) -> str:
+        return self.cfg.name_at(int(self.store_levels[i, j]))
+
+    def quant(self, i: int, j: int) -> bool:
+        return _needs_quant(self.name(i, j), self.cfg)
+
+    def tile(self, i: int, j: int) -> TileInfo:
+        lv, sv = self.level(i, j), int(self.store_levels[i, j])
+        name = self.cfg.name_at(lv)
+        return TileInfo(level=lv, name=name, store_level=sv,
+                        store_name=self.cfg.name_at(sv),
+                        quantize=_needs_quant(name, self.cfg))
+
+    def panel_meta(self, p: int) -> "PanelMeta":
+        """Static metadata for the fused panel update at panel ``p``:
+        storage names/quant flags for the trailing row tiles of column
+        ``p`` and compute names/quant flags for every trailing pair."""
+        cfg = self.cfg
+        rows = range(p + 1, self.ntiles)
+        store_names = tuple(self.store_name(i, p) for i in rows)
+        store_quants = tuple(_needs_quant(nm, cfg) for nm in store_names)
+        pair_names = tuple(tuple(self.name(i, j) for j in rows)
+                           for i in rows)
+        pair_quants = tuple(tuple(_needs_quant(nm, cfg) for nm in row)
+                            for row in pair_names)
+        return PanelMeta(store_names, store_quants, pair_names, pair_quants)
+
+    # -- census hooks ------------------------------------------------------
+    def level_counts(self) -> dict:
+        """Lower-triangle tile count per compute dtype name."""
+        counts: dict[str, int] = {}
+        for i in range(self.ntiles):
+            for j in range(i + 1):
+                nm = self.name(i, j)
+                counts[nm] = counts.get(nm, 0) + 1
+        return counts
+
+    def lowp_tile_fraction(self, names=("f16", "bf16", "int8")) -> float:
+        counts = self.level_counts()
+        total = sum(counts.values())
+        low = sum(v for k, v in counts.items() if k in names)
+        return low / total if total else 0.0
+
+    def describe(self) -> str:
+        """Human-readable tile map + census (README example)."""
+        short = {"int8": "i8 ", "f16": "h16", "bf16": "b16", "f32": "f32",
+                 "f64": "f64"}
+        lines = [f"PrecisionPlan(n={self.n}, leaf={self.leaf}, "
+                 f"tiles={self.ntiles}x{self.ntiles}, "
+                 f"ladder={self.cfg.describe()})"]
+        counts = self.level_counts()
+        lines.append("  tiles: " + "  ".join(
+            f"{k}={v}" for k, v in sorted(counts.items())))
+        lines.append(f"  low-precision tile fraction: "
+                     f"{self.lowp_tile_fraction():.2f}")
+        for i in range(self.ntiles):
+            row = " ".join(short.get(self.name(i, j), self.name(i, j))
+                           for j in range(i + 1))
+            lines.append("  " + row)
+        return "\n".join(lines)
+
+    def __repr__(self):
+        return (f"PrecisionPlan(n={self.n}, leaf={self.leaf}, "
+                f"ladder={self.cfg.describe()})")
+
+
+@dataclasses.dataclass(frozen=True)
+class PanelMeta:
+    """Hashable (jit-static) per-panel metadata for the panel kernel."""
+
+    store_names: tuple          # per trailing row tile of the panel
+    store_quants: tuple
+    pair_names: tuple           # [i][j] compute name of trailing pair
+    pair_quants: tuple
+
+
+@functools.lru_cache(maxsize=256)
+def build_plan(n: int, cfg: PrecisionConfig) -> PrecisionPlan:
+    """Cached plan construction (pure geometry — no array ops)."""
+    return PrecisionPlan(n, cfg)

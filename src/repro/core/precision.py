@@ -57,12 +57,17 @@ class PrecisionConfig:
     quantize: bool = True        # per-block quant for NARROW dtypes
     storage_rounding: bool = True  # round updated blocks to their level dtype
     kernel_impl: str | None = None  # ops.py dispatch override
+    #: execution engine: "blocked" = flat in-place tile schedule driven by
+    #: the static precision plan (core/plan.py + core/blocked.py, the
+    #: default); "tree" = the paper's nested recursion (reference oracle).
+    engine: str = "blocked"
 
     def __post_init__(self):
         assert self.levels, "need at least one precision level"
         for lv in self.levels:
             assert lv in DTYPES, lv
         assert self.leaf % 128 == 0 and self.leaf > 0, self.leaf
+        assert self.engine in ("tree", "blocked"), self.engine
 
     # -- ladder ------------------------------------------------------------
     def name_at(self, level: int) -> str:

@@ -47,6 +47,26 @@ def dequant(x, alpha):
     return x.astype(jnp.float32) * alpha
 
 
+def storage_round(x, level_name: str, quantize: bool = True):
+    """Round ``x``'s VALUES to ``level_name``'s grid, keep container dtype.
+
+    This is the value-level form of :func:`quant_block`: the result lives
+    in ``x.dtype`` but carries exactly the information a ``level_name``
+    store would (for narrow formats the block is rounded *scaled*, i.e.
+    ``q * alpha``, so storage never overflows — unless ``quantize`` is
+    off, reproducing the paper's overflow ablation). Both the tree's
+    ``_round_to`` and the flat blocked executor go through here so the
+    two engines share one definition of "stored at level ``name``".
+    """
+    dt = DTYPES[level_name]
+    if jnp.dtype(dt) == x.dtype:
+        return x
+    if level_name == "int8" or (level_name in NARROW and quantize):
+        xq, alpha = quant_block(x, level_name, True)
+        return xq.astype(x.dtype) * alpha.astype(x.dtype)
+    return x.astype(dt).astype(x.dtype)
+
+
 def quant_int8(x):
     """Symmetric int8 quantization with per-tensor scale (gradient
     compression path). Returns (q, scale) with x ~= q * scale."""

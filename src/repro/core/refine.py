@@ -45,7 +45,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core.precision import DTYPES, PrecisionConfig
-from repro.core.solve import cholesky, solve_factored
+from repro.core.solve import cholesky_padded, solve_factored
 from repro.kernels import ops
 
 _TINY = 1e-30
@@ -308,7 +308,7 @@ def _as_refine_config(refine) -> RefineConfig:
 
 def iterative_refine(a, b, cfg: PrecisionConfig | None = None,
                      refine: int | RefineConfig | None = None, *,
-                     l=None, col_tol=None) -> RefineResult:
+                     l=None, col_tol=None, linvs=None) -> RefineResult:
     """Factor once in ``cfg``'s ladder, refine to ``refine.tol``.
 
     ``a`` is required here (the residual needs it) in the residual
@@ -318,14 +318,23 @@ def iterative_refine(a, b, cfg: PrecisionConfig | None = None,
     — the fused Pallas kernel on TPU (or when ``cfg.kernel_impl``
     forces it), the XLA oracle elsewhere. ``col_tol`` gives an (n, k)
     ``b`` per-column tolerances overriding the scalar ``refine.tol``
-    (the serve scheduler's per-request accuracy targets).
+    (the serve scheduler's per-request accuracy targets). ``linvs``
+    reuses cached diagonal-tile inverses across every sweep's pair of
+    triangular solves (blocked engine; see ``core.blocked.diag_tri_inv``).
     """
     cfg = cfg or PrecisionConfig()
     rcfg = _as_refine_config(refine)
     rdtype = rcfg.rdtype()
     assert a is not None, "refinement forms residuals b - A x: pass A"
     if l is None:
-        l = cholesky(a, cfg)
+        l = cholesky_padded(a, cfg)   # solves consume the padded form
+    if linvs is None and cfg.engine == "blocked":
+        # every sweep runs two triangular passes against the same factor:
+        # invert the diagonal leaves once here instead of per sweep
+        from repro.core.blocked import diag_tri_inv
+        from repro.core.tree import pad_factor
+        l = pad_factor(l, cfg.leaf)
+        linvs = diag_tri_inv(l, cfg)
     a_r = jnp.asarray(a, rdtype)
     b_r = jnp.asarray(b, rdtype)
 
@@ -336,7 +345,8 @@ def iterative_refine(a, b, cfg: PrecisionConfig | None = None,
         return ops.residual(a_r, x, b_r, impl=cfg.kernel_impl)
 
     def base_solve(r):
-        return solve_factored(l, r.astype(l.dtype), cfg).astype(rdtype)
+        return solve_factored(l, r.astype(l.dtype), cfg,
+                              linvs=linvs).astype(rdtype)
 
     correct = scaled_solve(base_solve)
     # the initial solve is unscaled so refine=0 reproduces cholesky_solve
@@ -347,7 +357,8 @@ def iterative_refine(a, b, cfg: PrecisionConfig | None = None,
 
 def gmres_refine(a, b, cfg: PrecisionConfig | None = None,
                  refine: int | RefineConfig | None = None, *,
-                 l=None, col_tol=None) -> RefineResult:
+                 l=None, col_tol=None, linvs=None) -> RefineResult:
     """GMRES-IR convenience wrapper (``method`` forced to ``"gmres"``)."""
     rcfg = dataclasses.replace(_as_refine_config(refine), method="gmres")
-    return iterative_refine(a, b, cfg, rcfg, l=l, col_tol=col_tol)
+    return iterative_refine(a, b, cfg, rcfg, l=l, col_tol=col_tol,
+                            linvs=linvs)

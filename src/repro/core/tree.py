@@ -35,14 +35,8 @@ def _round_to(x, name: str, cfg: PrecisionConfig):
     """
     if not cfg.storage_rounding:
         return x
-    from repro.core.precision import DTYPES, NARROW
-    dt = DTYPES[name]
-    if jnp.dtype(dt) == x.dtype:
-        return x
-    if name == "int8" or (name in NARROW and cfg.quantize):
-        xq, alpha = quant_block(x, name, True)
-        return (xq.astype(x.dtype) * alpha.astype(x.dtype))
-    return x.astype(dt).astype(x.dtype)
+    from repro.core.quantize import storage_round
+    return storage_round(x, name, cfg.quantize)
 
 
 def _sym_from_lower(a):
@@ -174,6 +168,16 @@ def tree_trsm_left(b, l, cfg: PrecisionConfig, *, trans: bool,
     return jnp.concatenate([x1, x2], axis=0)
 
 
+def _pad_identity_tail(a, npad: int):
+    """Embed ``a`` in an ``npad x npad`` zero matrix with a unit diagonal
+    tail — the shared body of :func:`pad_spd` and :func:`pad_factor`."""
+    n = a.shape[-1]
+    out = jnp.zeros((npad, npad), a.dtype)
+    out = out.at[:n, :n].set(a)
+    out = out.at[jnp.arange(n, npad), jnp.arange(n, npad)].set(1.0)
+    return out
+
+
 def pad_spd(a, leaf: int):
     """Pad an SPD matrix to a multiple of ``leaf`` with an identity tail
     (keeps SPD-ness exactly; the factor of the tail is the identity)."""
@@ -181,7 +185,17 @@ def pad_spd(a, leaf: int):
     npad = -(-n // leaf) * leaf
     if npad == n:
         return a, n
-    out = jnp.zeros((npad, npad), a.dtype)
-    out = out.at[:n, :n].set(a)
-    out = out.at[jnp.arange(n, npad), jnp.arange(n, npad)].set(1.0)
-    return out, n
+    return _pad_identity_tail(a, npad), n
+
+
+def pad_factor(l, leaf: int):
+    """Pad a Cholesky factor to a multiple of ``leaf`` with an identity
+    tail. Because :func:`pad_spd` pads the matrix with an identity block,
+    ``pad_factor(cholesky(a)[:n, :n]) == cholesky(pad_spd(a))`` exactly —
+    solve paths re-pad cached factors through here instead of rebuilding
+    the three ``.at[]`` writes inline on every call."""
+    n = l.shape[-1]
+    npad = -(-n // leaf) * leaf
+    if npad == n:
+        return l
+    return _pad_identity_tail(l, npad)

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import qgemm as _qgemm
+from repro.kernels import panel as _panel
 from repro.kernels import potrf as _potrf
 from repro.kernels import residual as _residual
 from repro.kernels import syrk as _syrk
@@ -61,16 +62,24 @@ def tri_inv(l, *, impl=None):
     return _potrf.tri_inv_leaf(l, interpret=(impl == "interpret"))
 
 
-def trsm(b, l, *, side="right", trans=True, impl=None):
+def trsm(b, l, *, side="right", trans=True, linv=None, impl=None):
+    """Triangular solve. ``linv`` takes a precomputed ``tri_inv(l)`` —
+    callers that solve repeatedly against one factor (cholesky_solve's
+    two sweeps, K-FAC steps, the serve factor cache) pay the leaf
+    inversion once instead of per call."""
     impl = resolve_impl(impl)
-    if impl == "jnp":
+    if impl == "jnp" and linv is None:
         return _ref.trsm_ref(b, l, side=side, trans=trans)
     if side == "right" and trans:
-        return _trsm.trsm_leaf(b, l, interpret=(impl == "interpret"))
+        if impl == "jnp":
+            return _ref.qgemm_ref(b, linv, trans_b=True, out_dtype=b.dtype)
+        return _trsm.trsm_leaf(b, l, linv=linv,
+                               interpret=(impl == "interpret"))
     # Left-side leaf solves reduce to the right-side kernel by transposition:
     #   L^{-1} B   = (B^T L^{-T})^T
     #   L^{-T} B   = (B^T L^{-1})^T = ((L^{-1} B^T... ) use inv directly
-    linv = tri_inv(l, impl=impl)
+    if linv is None:
+        linv = tri_inv(l, impl=impl)
     if side == "left" and not trans:
         return qgemm(linv.astype(b.dtype), b, impl=impl,
                      out_dtype=b.dtype)
@@ -93,6 +102,28 @@ def residual(a, x, b, *, impl=None, **tiles):
     return _residual.residual_fused(a, x, b,
                                     interpret=(impl == "interpret"),
                                     **tiles)
+
+
+def panel_update(linv, a21, c, *, store_names, store_quants, pair_names,
+                 pair_quants, rounding=True, impl=None):
+    """Fused panel TRSM + trailing SYRK for the blocked executor.
+
+    One dispatch applies ``L21 = A21 @ L11^-T`` and ``C -= L21 L21^T``
+    (lower tiles only) with the plan's per-tile precision metadata.
+    f64 containers take the jnp oracle (no f64 on the MXU), like
+    :func:`residual`. Returns ``(l21, c_updated)``.
+    """
+    impl = resolve_impl(impl)
+    if impl == "jnp" or any(jnp.dtype(v.dtype) == jnp.float64
+                            for v in (linv, a21, c)):
+        return _ref.panel_update_ref(
+            linv, a21, c, store_names=store_names,
+            store_quants=store_quants, pair_names=pair_names,
+            pair_quants=pair_quants, rounding=rounding)
+    return _panel.panel_update(
+        linv, a21, c, store_names=store_names, store_quants=store_quants,
+        pair_names=pair_names, pair_quants=pair_quants, rounding=rounding,
+        interpret=(impl == "interpret"))
 
 
 def syrk(c, a, scale=1.0, beta=1.0, *, packed=False, impl=None, **tiles):

@@ -7,6 +7,8 @@ present, so the whole framework runs end-to-end on a laptop.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
@@ -89,6 +91,134 @@ def residual_ref(a, x, b):
     ad = _acc_dtype(a, x, b)
     acc = jnp.dot(a, x, preferred_element_type=ad)
     return (b.astype(ad) - acc).astype(b.dtype)
+
+
+def _round_tiles(x, name, quant, b):
+    """Per-(b, b)-tile ``storage_round``, vectorized over an (R, C) block.
+
+    Bitwise-identical per tile to ``repro.core.quantize.storage_round``
+    (same reductions, same cast chain) but one fused pass instead of a
+    python loop over tiles — the oracle's hot rounding path.
+    """
+    from repro.core.precision import DTYPES, NARROW, RMAX  # lazy: no cycle
+    dt = jnp.dtype(DTYPES[name])
+    if dt == x.dtype:
+        return x
+    R, C = x.shape
+    t = x.reshape(R // b, b, C // b, b)
+    if name == "int8":
+        amax = jnp.max(jnp.abs(t), axis=(1, 3), keepdims=True)
+        amax = amax.astype(jnp.float32)
+        alpha = jnp.maximum(amax, jnp.float32(1e-30)) / jnp.float32(127.0)
+        q = jnp.clip(jnp.round(t.astype(jnp.float32) / alpha), -127, 127)
+        return (q * alpha).astype(x.dtype).reshape(R, C)
+    if name in NARROW and quant:
+        amax = jnp.max(jnp.abs(t), axis=(1, 3), keepdims=True)
+        amax = amax.astype(jnp.float32)
+        alpha = jnp.maximum(jnp.float32(1.0),
+                            amax / jnp.float32(RMAX[name]))
+        q = (t / alpha.astype(t.dtype)).astype(dt).astype(x.dtype)
+        return (q * alpha.astype(x.dtype)).reshape(R, C)
+    return t.astype(dt).astype(x.dtype).reshape(R, C)
+
+
+def _name_runs(names, quants):
+    """Contiguous (start, end, name, quant) runs of equal dtype name."""
+    runs, i = [], 0
+    while i < len(names):
+        i2 = i
+        while i2 < len(names) and names[i2] == names[i]:
+            i2 += 1
+        runs.append((i, i2, names[i], quants[i]))
+        i = i2
+    return runs
+
+
+def _pair_rects(pair_names, nt):
+    """Decompose the strict-lower pair-dtype map into constant-dtype
+    rectangles ``(r0, r1, c0, c1, name)`` by merging equal row-runs
+    across adjacent columns — the plan's bisection structure makes the
+    coarse levels merge into a handful of large blocks, so the trailing
+    update runs as a few big GEMMs instead of one per tile pair."""
+    rects, open_ = [], {}
+    for j in range(nt + 1):
+        runs = set()
+        if j < nt:
+            i = j + 1
+            while i < nt:
+                nm = pair_names[i][j]
+                i2 = i
+                while i2 < nt and pair_names[i2][j] == nm:
+                    i2 += 1
+                runs.add((i, i2, nm))
+                i = i2
+        for key in list(open_):
+            if key not in runs:
+                rects.append((key[0], key[1], open_.pop(key), j, key[2]))
+        for key in runs:
+            open_.setdefault(key, j)
+    return rects
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("store_names", "store_quants", "pair_names",
+                     "pair_quants", "rounding"))
+def panel_update_ref(linv, a21, c, *, store_names, store_quants,
+                     pair_names, pair_quants, rounding=True):
+    """Oracle for the fused panel update (kernels/panel.py).
+
+    Same math as the kernel, tile for tile: per-tile storage rounding of
+    the incoming panel, ``L21 = A21 @ L11^-T`` with wide accumulation,
+    per-tile storage rounding of L21, then the lower-triangular trailing
+    update with both operands rounded to each (i, j) pair's compute
+    dtype and the updated partial sums rounded back to tile precision.
+    Work is grouped for XLA: panel rows by storage-dtype run, trailing
+    pairs by constant-dtype rectangle (:func:`_pair_rects`), rounding by
+    fused per-tile passes (:func:`_round_tiles`).
+    """
+    m, b = a21.shape
+    nt = m // b
+    assert m % b == 0 and c.shape == (m, m), (a21.shape, c.shape)
+    ad = _acc_dtype(linv, a21, c)
+    linv_t = linv.T.astype(ad)
+
+    segs = []
+    for (i, i2, nm, q) in _name_runs(store_names, store_quants):
+        blk = a21[i * b:i2 * b].astype(ad)
+        if rounding:
+            blk = _round_tiles(blk, nm, q, b)
+        li = jnp.dot(blk, linv_t, preferred_element_type=ad)
+        if rounding:
+            li = _round_tiles(li, nm, q, b)
+        segs.append(li)
+    l21 = segs[0] if len(segs) == 1 else jnp.concatenate(segs, axis=0)
+
+    quant_by = {nm: q for row_n, row_q in zip(pair_names, pair_quants)
+                for nm, q in zip(row_n, row_q)}
+    lq = {nm: _round_tiles(l21, nm, q, b) for nm, q in quant_by.items()}
+
+    for (r0, r1, c0, c1, nm) in _pair_rects(pair_names, nt):
+        u = jnp.dot(lq[nm][r0 * b:r1 * b], lq[nm][c0 * b:c1 * b].T,
+                    preferred_element_type=ad)
+        blk = c[r0 * b:r1 * b, c0 * b:c1 * b].astype(ad) - u
+        if rounding:
+            blk = _round_tiles(blk, nm, quant_by[nm], b)
+        c = c.at[r0 * b:r1 * b, c0 * b:c1 * b].set(blk.astype(c.dtype))
+
+    rows = jax.lax.broadcasted_iota(jnp.int32, (b, b), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (b, b), 1)
+    for j in range(nt):
+        nm = pair_names[j][j]
+        lj = lq[nm][j * b:(j + 1) * b]
+        j0 = j * b
+        cur = c[j0:j0 + b, j0:j0 + b].astype(ad)
+        upd = cur - jnp.dot(lj, lj.T, preferred_element_type=ad)
+        if rounding:
+            upd = _round_tiles(upd, nm, quant_by[nm], b)
+        upd = jnp.where(rows >= cols, upd, cur)
+        c = c.at[j0:j0 + b, j0:j0 + b].set(upd.astype(c.dtype))
+    return l21.astype(a21.dtype), c
 
 
 def syrk_ref(c, a, *, alpha=1.0, beta=1.0, scale=1.0):

@@ -30,14 +30,20 @@ def _trsm_kernel(b_ref, linv_ref, o_ref, *, trans):
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "interpret"))
-def trsm_leaf(b, l, *, bm=DEFAULT_BM, interpret=False):
+def trsm_leaf(b, l=None, *, linv=None, bm=DEFAULT_BM, interpret=False):
     """Solve X L^T = B (right, lower, transposed — the paper's Alg. 2 leaf).
 
     b: (M, n) panel; l: (n, n) lower-triangular leaf (n multiple of 128).
+    ``linv`` takes a precomputed ``tri_inv_leaf(l)`` so repeated solves
+    against one factor (cholesky_solve's two sweeps, K-FAC steps, the
+    serve factor cache) skip the O(n^3) leaf inversion; otherwise it is
+    computed here from ``l``.
     """
     M, n = b.shape
-    assert l.shape == (n, n)
-    linv = tri_inv_leaf(l, interpret=interpret)
+    if linv is None:
+        assert l is not None and l.shape == (n, n), (b.shape,)
+        linv = tri_inv_leaf(l, interpret=interpret)
+    assert linv.shape == (n, n), (linv.shape, b.shape)
 
     bm = min(bm, M)
     Mp = (-(-M // bm)) * bm

@@ -28,9 +28,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.blocked import diag_tri_inv
 from repro.core.precision import PAPER_CONFIGS, PrecisionConfig
 from repro.core.refine import RefineConfig, RefineResult
-from repro.core.solve import cholesky, refine_solve
+from repro.core.solve import cholesky_padded, refine_solve
 from repro.models import transformer as T
 from repro.models.common import ModelConfig, NO_SHARD, Sharder
 
@@ -159,37 +160,55 @@ class SolverEngine:
         self.gmres_restart = gmres_restart
         assert max_cached_factors >= 1, max_cached_factors
         self.max_cached_factors = max_cached_factors
-        #: cache_key -> (fingerprint, factor), most-recently-used last
+        #: cache_key -> (fingerprint, padded factor, diag-tile inverses),
+        #: most-recently-used last
         self._factors: collections.OrderedDict = collections.OrderedDict()
 
     def _clamp(self, target_digits: float) -> float:
         rname = "f64" if jax.config.jax_enable_x64 else "f32"
         return min(float(target_digits), self._FLOOR_DIGITS[rname])
 
+    def _factorize(self, a):
+        """Padded factor + blocked-engine diagonal-tile inverses.
+
+        The factor is kept in its leaf-padded form (``pad_factor``
+        semantics) so non-multiple-of-leaf solves skip re-padding on
+        every request, and ``linvs`` lets every refinement sweep's pair
+        of triangular solves reuse the one-off leaf inversions.
+        """
+        l = cholesky_padded(a, self.cfg)
+        linvs = (diag_tri_inv(l, self.cfg)
+                 if self.cfg.engine == "blocked" else None)
+        return l, linvs
+
     def factor(self, a, cache_key=None, *, fingerprint=None):
         """Factorize (or fetch the cached factor for) ``a``.
 
-        A cache hit is only served when the stored fingerprint matches
-        ``a`` — a reused key with new matrix data refactorizes (and
-        replaces the stale entry) rather than returning a factor of some
-        other matrix. Insertions evict least-recently-used entries
-        beyond ``max_cached_factors``. ``fingerprint`` lets callers that
-        already fingerprinted ``a`` (the scheduler does, at submit time)
-        skip the redundant O(n) device round-trip.
+        Returns ``(l, linvs, cached)`` — the leaf-padded factor, the
+        cached diagonal-tile inverses (None for the tree engine) and a
+        cache-hit flag. A cache hit is only served when the stored
+        fingerprint matches ``a`` — a reused key with new matrix data
+        refactorizes (and replaces the stale entry) rather than
+        returning a factor of some other matrix. Insertions evict
+        least-recently-used entries beyond ``max_cached_factors``.
+        ``fingerprint`` lets callers that already fingerprinted ``a``
+        (the scheduler does, at submit time) skip the redundant O(n)
+        device round-trip.
         """
         if cache_key is None:
-            return cholesky(a, self.cfg), False
+            l, linvs = self._factorize(a)
+            return l, linvs, False
         fp = fingerprint if fingerprint is not None else matrix_fingerprint(a)
         hit = self._factors.get(cache_key)
         if hit is not None and hit[0] == fp:
             self._factors.move_to_end(cache_key)
-            return hit[1], True
-        l = cholesky(a, self.cfg)
-        self._factors[cache_key] = (fp, l)
+            return hit[1], hit[2], True
+        l, linvs = self._factorize(a)
+        self._factors[cache_key] = (fp, l, linvs)
         self._factors.move_to_end(cache_key)
         while len(self._factors) > self.max_cached_factors:
             self._factors.popitem(last=False)
-        return l, False
+        return l, linvs, False
 
     def evict(self, cache_key):
         self._factors.pop(cache_key, None)
@@ -239,11 +258,12 @@ class SolverEngine:
         rcfg = RefineConfig(max_sweeps=self.max_sweeps,
                             tol=float(col_tol.min()), method=method,
                             gmres_restart=self.gmres_restart)
-        l, cached = self.factor(a, cache_key, fingerprint=fingerprint)
+        l, linvs, cached = self.factor(a, cache_key, fingerprint=fingerprint)
         bmat = jnp.concatenate(
             [b[:, None] if b.ndim == 1 else b for b in bs], axis=1)
         res: RefineResult = refine_solve(a, bmat, self.cfg, refine=rcfg,
-                                         l=l, col_tol=jnp.asarray(col_tol))
+                                         l=l, col_tol=jnp.asarray(col_tol),
+                                         linvs=linvs)
         sweeps = np.atleast_1d(np.asarray(res.iterations))
         resid = np.atleast_1d(np.asarray(res.residual))
         conv = np.atleast_1d(np.asarray(res.converged))

@@ -65,6 +65,79 @@ def test_residual_fused_vector():
                                rtol=2e-4, atol=2e-3)
 
 
+def _panel_meta(levels, nt, panel=0):
+    from repro.core.plan import build_plan
+    from repro.core.precision import PrecisionConfig
+    cfg = PrecisionConfig(levels=levels, leaf=128)
+    return build_plan((nt + 1 + panel) * 128, cfg).panel_meta(panel)
+
+
+def _panel_operands(nt, b=128, seed=3):
+    rng = np.random.default_rng(seed)
+    linv = np.tril(rng.standard_normal((b, b)).astype(np.float32))
+    linv[np.diag_indices(b)] += 3.0
+    a21 = rng.standard_normal((nt * b, b)).astype(np.float32)
+    c = rng.standard_normal((nt * b, nt * b)).astype(np.float32)
+    return jnp.asarray(linv), jnp.asarray(a21), jnp.asarray(c)
+
+
+@pytest.mark.parametrize("levels,nt", [
+    (("f32",), 2), (("f16", "f32"), 3), (("f16", "f16", "f32"), 4),
+    (("bf16", "f32"), 2), (("int8", "f32"), 3)])
+def test_panel_update_fused(levels, nt):
+    """Fused panel kernel (interpret) is bit-identical to the oracle
+    across ladder mixes: same per-tile rounding, same update tiling."""
+    meta = _panel_meta(levels, nt)
+    linv, a21, c = _panel_operands(nt)
+    kw = dict(store_names=meta.store_names, store_quants=meta.store_quants,
+              pair_names=meta.pair_names, pair_quants=meta.pair_quants)
+    l21r, cr = ref.panel_update_ref(linv, a21, c, **kw)
+    l21k, ck = ops.panel_update(linv, a21, c, impl="interpret", **kw)
+    np.testing.assert_array_equal(np.asarray(l21r), np.asarray(l21k))
+    np.testing.assert_array_equal(np.asarray(cr), np.asarray(ck))
+
+
+def test_panel_update_no_rounding():
+    """storage_rounding=False: raw f32 trsm + syrk, upper c preserved."""
+    meta = _panel_meta(("f16", "f32"), 3)
+    linv, a21, c = _panel_operands(3)
+    kw = dict(store_names=meta.store_names, store_quants=meta.store_quants,
+              pair_names=meta.pair_names, pair_quants=meta.pair_quants,
+              rounding=False)
+    l21, cu = ops.panel_update(linv, a21, c, impl="interpret", **kw)
+    l21r, cur = ref.panel_update_ref(linv, a21, c, **kw)
+    np.testing.assert_array_equal(np.asarray(l21), np.asarray(l21r))
+    np.testing.assert_array_equal(np.asarray(cu), np.asarray(cur))
+    # strictly-upper tiles of c pass through untouched
+    got = np.asarray(cu)
+    want = np.asarray(c)
+    b = 128
+    for i in range(3):
+        for j in range(i + 1, 3):
+            np.testing.assert_array_equal(
+                got[i * b:(i + 1) * b, j * b:(j + 1) * b],
+                want[i * b:(i + 1) * b, j * b:(j + 1) * b])
+
+
+def test_trsm_leaf_accepts_precomputed_linv():
+    """Satellite: trsm_leaf(linv=) skips the leaf inversion and matches
+    the from-scratch call bitwise (jnp dispatch path included)."""
+    from repro.kernels import potrf as _potrf
+    from repro.kernels import trsm as _trsm
+    rng = np.random.default_rng(9)
+    l = np.tril(rng.standard_normal((128, 128)).astype(np.float32))
+    l[np.diag_indices(128)] += 8.0
+    b = rng.standard_normal((300, 128)).astype(np.float32)
+    x1 = _trsm.trsm_leaf(jnp.asarray(b), jnp.asarray(l), interpret=True)
+    linv = _potrf.tri_inv_leaf(jnp.asarray(l), interpret=True)
+    x2 = _trsm.trsm_leaf(jnp.asarray(b), linv=linv, interpret=True)
+    np.testing.assert_array_equal(np.asarray(x1), np.asarray(x2))
+    # ops-level jnp dispatch with a provided linv turns into one GEMM
+    x3 = ops.trsm(jnp.asarray(b), jnp.asarray(l), linv=linv, impl="jnp")
+    np.testing.assert_allclose(np.asarray(x3), np.asarray(x1),
+                               rtol=1e-4, atol=1e-4)
+
+
 def test_residual_f64_routes_to_oracle():
     """f64 residuals (the x64 accuracy path) must bypass the fused
     kernel's f32 accumulator bit-for-bit."""
