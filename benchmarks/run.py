@@ -10,7 +10,8 @@ Prints ``name,us_per_call,derived`` CSV (assignment contract).
   bench_serve        beyond-paper batched solve serving + fused residual
   bench_depth        Fig. 10  size/depth scaling
   bench_portability  Fig. 9/11 backend dispatch agreement
-  bench_dist         beyond-paper multi-chip solver (8-dev subprocess)
+  bench_dist         beyond-paper multi-chip solver (4-dev subprocess;
+                     writes BENCH_dist.json for CI's dist gate)
 
 Accuracy, refinement and distributed benches need different
 process-level settings (x64 / forced device count), so run.py re-execs
@@ -104,7 +105,7 @@ def main(argv=None) -> None:
     sub_rows += _sub("benchmarks.bench_refine", {"JAX_ENABLE_X64": "1"})
     sub_rows += _sub(
         "benchmarks.bench_dist",
-        {"XLA_FLAGS": "--xla_force_host_platform_device_count=8"})
+        {"XLA_FLAGS": "--xla_force_host_platform_device_count=4"})
     # roofline table (reads experiments/dryrun if present); it prints
     # rows directly, so tee its stdout into the artifact rows as well
     try:

@@ -4,7 +4,7 @@ Each module defines full() (the exact published config) and smoke()
 (a reduced same-family config for CPU tests). SHAPES lists the assigned
 input-shape cells; SKIP_CELLS marks (arch, shape) pairs excluded per the
 assignment (long_500k needs sub-quadratic attention — only the SSM /
-hybrid archs run it; see DESIGN.md §5).
+hybrid archs run it; see docs/ARCHITECTURE.md, "Model and training integrations").
 """
 from __future__ import annotations
 

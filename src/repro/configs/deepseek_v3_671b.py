@@ -1,7 +1,7 @@
 """deepseek-v3-671b [moe] — 61L d_model=7168, MLA (q_lora=1536,
 kv_lora=512, nope=128, rope=64, v=128, 128H), MoE 256 routed top-8 +
 1 shared expert, expert d_ff=2048, first 3 layers dense (d_ff=18432),
-vocab=129280 [arXiv:2412.19437]. MTP head is out of scope (DESIGN.md §5)."""
+vocab=129280 [arXiv:2412.19437]. MTP head is out of scope (architecture stub; docs/ARCHITECTURE.md)."""
 from repro.models.common import ModelConfig
 
 ARCH = "deepseek-v3-671b"

@@ -1,7 +1,8 @@
 """musicgen-large [audio] — decoder-only over EnCodec tokens: 48L
 d_model=2048 32H (MHA kv=32) d_ff=8192 vocab=2048, 4 codebooks
 [arXiv:2306.05284]. Text-conditioning cross-attention is out of scope
-(stub: unconditional decoder; see DESIGN.md §5)."""
+(stub: unconditional decoder; see docs/ARCHITECTURE.md, "Model and
+training integrations")."""
 from repro.models.common import ModelConfig
 
 ARCH = "musicgen-large"

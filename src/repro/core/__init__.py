@@ -11,7 +11,8 @@ Public API:
 """
 from repro.core.blocked import (blocked_potrf, blocked_trsm_left,
                                 diag_tri_inv)
-from repro.core.plan import PrecisionPlan, TileInfo, build_plan
+from repro.core.plan import (PrecisionPlan, ShardedPlan, TileInfo,
+                             build_plan, shard)
 from repro.core.precision import (DTYPES, PAPER_CONFIGS, PEAK_FLOPS, RMAX,
                                   PrecisionConfig)
 from repro.core.quantize import (dequant, dequant_int8, quant_block,
@@ -30,7 +31,7 @@ from repro.core.treematrix import (TreeSPD, storage_ratio,
 
 __all__ = [
     "DTYPES", "PAPER_CONFIGS", "PEAK_FLOPS", "RMAX", "PrecisionConfig",
-    "PrecisionPlan", "TileInfo", "build_plan",
+    "PrecisionPlan", "ShardedPlan", "TileInfo", "build_plan", "shard",
     "blocked_potrf", "blocked_trsm_left", "diag_tri_inv",
     "dequant", "dequant_int8", "quant_block", "quant_int8",
     "storage_round",

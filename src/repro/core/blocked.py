@@ -50,7 +50,7 @@ def _round(x, name: str, cfg: PrecisionConfig):
     return storage_round(x, name, cfg.quantize)
 
 
-def blocked_potrf(a, cfg: PrecisionConfig):
+def blocked_potrf(a, cfg: PrecisionConfig, *, plan=None):
     """Lower Cholesky factor of SPD ``a`` via the flat tile schedule.
 
     Reads the lower triangle only; returns L with zeroed upper triangle.
@@ -58,12 +58,20 @@ def blocked_potrf(a, cfg: PrecisionConfig):
     :func:`repro.core.tree.pad_spd` otherwise — :func:`repro.core.solve.
     cholesky` does). Numerically equivalent to :func:`tree_potrf`; see
     the module docstring for the exact contract.
+
+    ``plan`` overrides the per-tile precision table (default: the plan
+    of ``a``'s own geometry). The distributed solver passes a
+    :meth:`~repro.core.plan.PrecisionPlan.subplan` view here so its
+    redundant diagonal-block factorizations compute every tile at the
+    precision the GLOBAL plan assigns it.
     """
     a = jnp.asarray(a)
     n = a.shape[-1]
     assert a.shape == (n, n), a.shape
     assert n % cfg.leaf == 0, (n, cfg.leaf)
-    plan = build_plan(n, cfg)
+    if plan is None:
+        plan = build_plan(n, cfg)
+    assert plan.ntiles == n // cfg.leaf, (plan.ntiles, n, cfg.leaf)
     b, T, high = cfg.leaf, plan.ntiles, cfg.high_dtype
     # The trailing matrix is carried as a shrinking working set and each
     # finished block column is emitted exactly once — O(n^2) assembly

@@ -8,7 +8,8 @@ Mirrors the tree recursion and counts, per precision level:
 This is what backs the paper's structural claims on CPU: Fig. 10's
 "deeper recursion => larger low-precision FLOP fraction" and the derived
 MXU throughput model in benchmarks/bench_cholesky.py (real TFLOP/s cannot
-be measured in this container; see DESIGN.md §6).
+be measured in this container; see docs/ARCHITECTURE.md, "Census and
+roofline").
 """
 from __future__ import annotations
 

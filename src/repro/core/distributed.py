@@ -1,4 +1,6 @@
-"""Multi-chip distributed Cholesky via shard_map (DESIGN.md §4.4).
+"""Multi-chip distributed Cholesky via shard_map.
+
+(Architecture notes: docs/ARCHITECTURE.md, "Distributed solver".)
 
 1-D block-row layout: device i of the ``axis`` mesh axis owns rows
 [i*w, (i+1)*w) of the global (n, n) SPD matrix, w = n/P. The factorization
@@ -7,17 +9,39 @@ is a right-looking panel sweep whose *step loop unrolls at trace time*
 masked FLOP waste.
 
 Per panel j:
-  1. all-gather the raw column panel            (comm: n*w)
-  2. every device factorizes the (w, w) diagonal block redundantly with
-     the paper's tree-POTRF (tiny vs the panel) and tree-TRSMs its own
-     row block                                   (compute: w^3/3 + w^3)
-  3. all-gather the solved panel                 (comm: n*w)
+  1. broadcast (or all-gather) the (w, w) diagonal block   (comm: w^2|n*w)
+  2. every device factorizes the diagonal block redundantly (tiny vs the
+     panel) and TRSMs its own row block                     (compute: w^3)
+  3. all-gather the solved panel                            (comm: n*w)
   4. local trailing GEMM update of its rows (qgemm, mixed precision)
 
-The local POTRF/TRSM/GEMM are exactly the paper's recursive mixed-
-precision routines, so the precision ladder applies unchanged on every
-shard. Collective cost 2*n*w per step is the §Perf hillclimb target
-(EXPERIMENTS.md: replace gather-1 with a (w,w) ppermute broadcast).
+The local POTRF/TRSM are the same precision-planned engines as the
+single-device path (``cfg.engine`` selects them):
+
+* ``"blocked"`` (default) — :func:`repro.core.blocked.blocked_potrf` /
+  :func:`~repro.core.blocked.blocked_trsm_left`, driven by the global
+  :class:`~repro.core.plan.PrecisionPlan` partitioned by block row
+  (:func:`repro.core.plan.shard`). The diagonal factorization runs on a
+  :meth:`~repro.core.plan.PrecisionPlan.subplan` view so every tile
+  keeps its GLOBAL precision, each shard storage-rounds its block-row
+  slice of the solved panel per the plan, and — for w > leaf — the
+  per-panel fused panel kernel (:mod:`repro.kernels.panel`) dispatches
+  locally inside the diagonal factorization.
+* ``"tree"`` — the paper's recursive routines (the pre-plan schedule,
+  kept as the distributed reference oracle and raced by
+  ``benchmarks/bench_dist.py``).
+
+Collectives are quantized by default (``compress_comm=True``): the
+solved panel travels at the precision the sharded plan assigns the
+collective — the coarsest level any trailing consumer computes at
+(:meth:`~repro.core.plan.ShardedPlan.comm_name`). Early panels move in
+the ladder's low precision (halving the dominant n*w term, per-shard
+scales riding along as (P,) f32); panels near the diagonal, whose
+consumers all compute at fine levels, are gathered losslessly. The tree
+engine predates the plan and always compresses at level 0. Collective
+cost 2*n*w per step is the open perf item (docs/ARCHITECTURE.md,
+"Performance notes" C3: replace gather-1 with a (w, w) ppermute
+broadcast).
 """
 from __future__ import annotations
 
@@ -28,22 +52,142 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
+from repro.core.blocked import blocked_potrf, blocked_trsm_left, diag_tri_inv
+from repro.core.plan import build_plan, shard
 from repro.core.precision import PrecisionConfig
-from repro.core.quantize import quant_block
+from repro.core.quantize import quant_block, storage_round
 from repro.core.tree import tree_potrf, tree_trsm, tree_trsm_left
 from repro.kernels import ops
 
 
-def _local_potrf(a_local, *, axis: str, nshards: int, cfg: PrecisionConfig,
-                 broadcast_diag_only: bool, compress_comm: bool):
+def _gather_panel(li, name: str, quant: bool, axis: str, compress: bool):
+    """All-gather the solved (w, w) panel block at precision ``name``.
+
+    Returns ``(liq, s1, gathered)``: the local block quantized to the
+    collective's dtype, its scale, and the (P, w, w) gather in that
+    dtype. ``compress=False`` or a wide ``name`` moves raw f32 — the
+    quantization then happens after the gather, exactly as before.
+    """
+    if not compress or name in ("f32", "f64"):
+        gath = jax.lax.all_gather(li, axis)
+        return None, None, gath
+    liq, s1 = quant_block(li, name, quant)
+    if liq.dtype == jnp.int8:
+        gath = jax.lax.all_gather(liq, axis)         # int8 wire format
+    else:
+        # bitcast to u16 so XLA cannot commute the 16-bit -> f32 convert
+        # ahead of the collective (it otherwise gathers at f32, doubling
+        # the bytes — measured in benchmarks/bench_dist.py)
+        bits = jax.lax.bitcast_convert_type(liq, jnp.uint16)
+        gath = jax.lax.bitcast_convert_type(jax.lax.all_gather(bits, axis),
+                                            liq.dtype)
+    return liq, s1, gath
+
+
+def _round_panel_rows(li, my, codes, names, quants, leaf: int):
+    """Round each (leaf, leaf) tile of a shard's (w, w) panel block onto
+    the storage grid its plan slice assigns it.
+
+    ``codes`` is the ShardedPlan's (T, tps) int32 store-code table
+    (shared by all shards — SPMD traces once); ``my`` is the traced
+    shard id, so shard s reads rows ``s*tps + r``. Mirrors the panel
+    kernel's static-variants + traced-select idiom at the jnp level.
+    """
+    tps = codes.shape[1]
+    out = li
+    for r in range(tps):
+        for c in range(tps):
+            tile = li[r * leaf:(r + 1) * leaf, c * leaf:(c + 1) * leaf]
+            code = codes[my * tps + r, c]
+            t = storage_round(tile, names[0], quants[0])
+            for k in range(1, len(names)):
+                t = jnp.where(code == k,
+                              storage_round(tile, names[k], quants[k]), t)
+            out = out.at[r * leaf:(r + 1) * leaf,
+                         c * leaf:(c + 1) * leaf].set(t)
+    return out
+
+
+def _local_potrf_blocked(a_local, *, axis: str, nshards: int,
+                         cfg: PrecisionConfig, broadcast_diag_only: bool,
+                         compress_comm: bool):
+    """Plan-driven local engine: blocked POTRF/TRSM + planned collectives."""
+    w, n = a_local.shape
+    my = jax.lax.axis_index(axis)
+    sp = shard(build_plan(n, cfg), nshards)
+    for j in range(nshards):
+        colpanel = a_local[:, j * w:(j + 1) * w]                 # (w, w)
+        if broadcast_diag_only:
+            # Optimized collective schedule (perf note C1): only the
+            # owner's (w, w) diagonal block moves (psum of a masked
+            # block), saving the first n*w all-gather.
+            mine = jnp.where(my == j, colpanel, jnp.zeros_like(colpanel))
+            diag = jax.lax.psum(mine, axis)
+        else:
+            diag = jax.lax.all_gather(colpanel, axis)[j]
+        # redundant diagonal factorization at the GLOBAL plan's tile
+        # precisions; w > leaf dispatches the fused panel kernel inside
+        ld = blocked_potrf(diag, cfg, plan=sp.diag_plan(j))
+        linvs = diag_tri_inv(ld, cfg)
+        # own row block: li = colpanel @ ld^{-T}  via  (ld^{-1} colpanel^T)^T
+        li = blocked_trsm_left(colpanel.T, ld, cfg, trans=False,
+                               linvs=linvs).T
+        if cfg.storage_rounding:
+            # each shard rounds ITS block-row slice of the solved panel
+            # onto the plan's storage grids (the single-device engine's
+            # TRSM-leaf rounding, partitioned by block row)
+            codes = jnp.asarray(sp.store_codes(j))
+            li = _round_panel_rows(li, my, codes, sp.names, sp.quants,
+                                   cfg.leaf)
+        li = jnp.where(my == j, ld, li)     # owner keeps the exact factor
+        if j < nshards - 1:
+            # collective + trailing update at the sharded plan's comm
+            # precision: the coarsest level any trailing consumer runs at
+            name, q = sp.comm_name(j), sp.comm_quant(j)
+            trail0 = (j + 1) * w
+            liq, s1, gath = _gather_panel(li, name, q, axis, compress_comm)
+            if liq is None:                  # wide (or uncompressed) wire
+                lt = gath[j + 1:].reshape(-1, w)
+                liq, s1 = quant_block(li, name, q)
+                ltq, s2 = quant_block(lt, name, q)
+                a_local = a_local.at[:, trail0:].set(
+                    ops.qgemm(liq, ltq, scale=-(s1 * s2),
+                              c=a_local[:, trail0:], beta=1.0,
+                              trans_b=True, out_dtype=a_local.dtype,
+                              impl=cfg.kernel_impl))
+            else:                            # quantized collective
+                lt = gath[j + 1:].reshape(-1, w)
+                upd = ops.qgemm(liq, lt, scale=s1, trans_b=True,
+                                out_dtype=jnp.float32,
+                                impl=cfg.kernel_impl)            # (w, m)
+                if q:
+                    # per-shard scales travel as (P,) f32 and rescale the
+                    # GEMM output column blocks
+                    scales = jax.lax.all_gather(s1, axis)        # (P,)
+                    upd = upd * jnp.repeat(scales[j + 1:], w)[None, :]
+                a_local = a_local.at[:, trail0:].add(
+                    -upd.astype(a_local.dtype))
+        a_local = a_local.at[:, j * w:(j + 1) * w].set(li)
+    # zero the (junk-filled) upper triangle of my rows
+    gr = jnp.arange(w)[:, None] + my * w
+    keep = jnp.arange(n)[None, :] <= gr
+    return jnp.where(keep, a_local, 0.0)
+
+
+def _local_potrf_tree(a_local, *, axis: str, nshards: int,
+                      cfg: PrecisionConfig, broadcast_diag_only: bool,
+                      compress_comm: bool):
+    """Legacy local engine: the paper's recursive routines, level-0 comm.
+
+    Kept as the distributed reference oracle (``cfg.engine == "tree"``)
+    and the baseline ``benchmarks/bench_dist.py`` races the planned
+    blocked engine against.
+    """
     w, n = a_local.shape
     my = jax.lax.axis_index(axis)
     for j in range(nshards):
         colpanel = a_local[:, j * w:(j + 1) * w]                 # (w, w)
         if broadcast_diag_only:
-            # Optimized collective schedule (§Perf C1): only the owner's
-            # (w, w) diagonal block is broadcast (psum of a masked block),
-            # saving the first n*w all-gather.
             mine = jnp.where(my == j, colpanel, jnp.zeros_like(colpanel))
             diag = jax.lax.psum(mine, axis)
         else:
@@ -55,20 +199,10 @@ def _local_potrf(a_local, *, axis: str, nshards: int, cfg: PrecisionConfig,
         name = cfg.name_at(0)
         q = cfg.needs_quant(0)
         if compress_comm and j < nshards - 1:
-            # §Perf C2: the trailing update consumes the gathered panel
-            # at the level-0 precision anyway — so quantize BEFORE the
-            # all-gather (the paper's per-block quantization applied to
-            # the collective): halves the dominant n*w term at zero
-            # extra rounding vs the in-compute quantization. Per-shard
-            # scales travel as (P,) f32 and rescale the GEMM output
-            # column blocks.
-            liq, s1 = quant_block(li, name, q)
-            # bitcast to u16 so XLA cannot commute the bf16->f32 convert
-            # ahead of the collective (it otherwise gathers at f32,
-            # doubling the bytes — measured in §Perf C2)
-            bits = jax.lax.bitcast_convert_type(liq, jnp.uint16)
-            gbits = jax.lax.all_gather(bits, axis)               # lowp!
-            gath = jax.lax.bitcast_convert_type(gbits, liq.dtype)
+            # the tree predates the plan: the trailing update always
+            # consumes the gathered panel at level-0 precision, so the
+            # collective always quantizes to level 0
+            liq, s1, gath = _gather_panel(li, name, q, axis, True)
             lt = gath[j + 1:].reshape(-1, w)
             upd = ops.qgemm(liq, lt, scale=s1, trans_b=True,
                             out_dtype=jnp.float32,
@@ -97,19 +231,25 @@ def _local_potrf(a_local, *, axis: str, nshards: int, cfg: PrecisionConfig,
 
 def dist_cholesky(a, mesh, cfg: PrecisionConfig | None = None,
                   axis: str = "model", *, broadcast_diag_only: bool = True,
-                  compress_comm: bool = False):
+                  compress_comm: bool = True):
     """Distributed lower Cholesky of a block-row-sharded SPD matrix.
 
     ``a``: global (n, n), n divisible by ``mesh.shape[axis] * cfg.leaf``.
-    Returns L with the same sharding. ``compress_comm`` gathers the
-    solved panel in the level-0 low precision (§Perf C2).
+    Returns L with the same sharding. ``cfg.engine`` selects the local
+    engine (``"blocked"`` — plan-driven, the default — or ``"tree"``,
+    the recursive oracle). ``compress_comm`` (default True) gathers the
+    solved panel in the precision the sharded plan assigns the
+    collective; ``False`` forces full-precision gathers (the baseline
+    ``benchmarks/bench_dist.py`` races).
     """
     cfg = cfg or PrecisionConfig()
     nshards = mesh.shape[axis]
     n = a.shape[-1]
     assert n % nshards == 0 and (n // nshards) % cfg.leaf == 0, (
         f"n={n} must be divisible by shards*leaf={nshards}*{cfg.leaf}")
-    fn = functools.partial(_local_potrf, axis=axis, nshards=nshards, cfg=cfg,
+    local = (_local_potrf_tree if cfg.engine == "tree"
+             else _local_potrf_blocked)
+    fn = functools.partial(local, axis=axis, nshards=nshards, cfg=cfg,
                            broadcast_diag_only=broadcast_diag_only,
                            compress_comm=compress_comm)
     spec = P(axis, None)
@@ -118,10 +258,23 @@ def dist_cholesky(a, mesh, cfg: PrecisionConfig | None = None,
 
 def _local_solve(l_local, b_local, *, axis: str, nshards: int,
                  cfg: PrecisionConfig):
-    """Forward then back substitution on block-row-sharded L and B."""
+    """Forward then back substitution on block-row-sharded L and B.
+
+    The per-shard diagonal solves run through the engine ``cfg.engine``
+    selects — :func:`~repro.core.blocked.blocked_trsm_left` (flat GEMM
+    substitution against cached leaf inverses) by default, the recursive
+    :func:`~repro.core.tree.tree_trsm_left` for the tree oracle. Both
+    run in the ladder's high precision: the solve is O(n^2) next to the
+    O(n^3) factorization, so narrowing it would buy nothing.
+    """
     w = l_local.shape[0]
     my = jax.lax.axis_index(axis)
     nrhs = b_local.shape[1]
+
+    def trsm_left(bm, lm, trans):
+        if cfg.engine == "tree":
+            return tree_trsm_left(bm, lm, cfg, trans=trans)
+        return blocked_trsm_left(bm, lm, cfg, trans=trans)
 
     # forward: y_j = L_jj^{-1} (b_j - sum_{k<j} L_jk y_k)
     y = jnp.zeros_like(b_local)
@@ -138,7 +291,7 @@ def _local_solve(l_local, b_local, *, axis: str, nshards: int,
             my == j, l_local[:, j * w:(j + 1) * w],
             jnp.zeros((w, w), l_local.dtype))
         diag = jax.lax.psum(diag_mine, axis)
-        yj = tree_trsm_left(acc, diag, cfg, trans=False)
+        yj = trsm_left(acc, diag, False)
         y = jnp.where(my == j, yj, y)
     # backward: x_j = L_jj^{-T} (y_j - sum_{k>j} L_kj^T x_k)
     x = jnp.zeros_like(y)
@@ -160,7 +313,7 @@ def _local_solve(l_local, b_local, *, axis: str, nshards: int,
             my == j, l_local[:, j * w:(j + 1) * w],
             jnp.zeros((w, w), l_local.dtype))
         diag = jax.lax.psum(diag_mine, axis)
-        xj = tree_trsm_left(acc, diag, cfg, trans=True)
+        xj = trsm_left(acc, diag, True)
         x = jnp.where(my == j, xj, x)
     return x
 

@@ -131,6 +131,25 @@ class PrecisionPlan:
                         store_name=self.cfg.name_at(sv),
                         quantize=_needs_quant(name, self.cfg))
 
+    def subplan(self, lo: int, hi: int) -> "PrecisionPlan":
+        """Tile-square view ``[lo, hi)`` of this plan (shared tables).
+
+        The returned object answers every lookup with the PARENT plan's
+        levels for those tiles, so an executor running on a sub-block
+        (the distributed solver's redundant diagonal factorization)
+        computes each tile at the precision the GLOBAL recursion assigns
+        it — not the precision a fresh size-``hi - lo`` recursion would.
+        """
+        assert 0 <= lo < hi <= self.ntiles, (lo, hi, self.ntiles)
+        sub = object.__new__(PrecisionPlan)
+        sub.n = (hi - lo) * self.leaf
+        sub.cfg = self.cfg
+        sub.leaf = self.leaf
+        sub.ntiles = hi - lo
+        sub.levels = self.levels[lo:hi, lo:hi]
+        sub.store_levels = self.store_levels[lo:hi, lo:hi]
+        return sub
+
     def panel_meta(self, p: int) -> "PanelMeta":
         """Static metadata for the fused panel update at panel ``p``:
         storage names/quant flags for the trailing row tiles of column
@@ -192,6 +211,102 @@ class PanelMeta:
     store_quants: tuple
     pair_names: tuple           # [i][j] compute name of trailing pair
     pair_quants: tuple
+
+
+class ShardedPlan:
+    """Block-row partition of a :class:`PrecisionPlan` over ``nshards``.
+
+    The distributed solver (:mod:`repro.core.distributed`) lays the
+    global matrix out in 1-D block rows: shard ``s`` owns tile rows
+    ``[s*tps, (s+1)*tps)`` with ``tps = ntiles // nshards``, and panel
+    ``j`` is the j-th ``(w, w)`` block column, ``w = n // nshards``.
+    This view answers the three questions that layout asks of the
+    precision map, all statically (pure numpy, no array ops):
+
+    * :meth:`diag_plan` — the tile-square sub-plan of panel ``j``'s
+      diagonal block, so the redundant local factorization computes each
+      tile at its GLOBAL precision (see :meth:`PrecisionPlan.subplan`).
+    * :meth:`store_codes` / :attr:`names` — each shard's block-row slice
+      of the per-tile STORAGE map for panel ``j``, as an int32 code
+      table the (SPMD, trace-once) local executor indexes with its
+      traced shard id.
+    * :meth:`comm_level` / :meth:`comm_name` — the precision of panel
+      ``j``'s collective: the coarsest compute level any trailing
+      consumer of the gathered panel runs at. Early panels (far corner
+      still in play) communicate at the ladder's coarse level — the
+      paper's per-block quantization applied to the all-gather — while
+      panels near the diagonal, whose every consumer computes at a fine
+      level, are gathered losslessly. "Precision rises toward the
+      diagonal", applied to collectives.
+    """
+
+    def __init__(self, plan: PrecisionPlan, nshards: int):
+        assert nshards >= 1 and plan.ntiles % nshards == 0, (
+            f"ntiles={plan.ntiles} must divide into nshards={nshards}")
+        self.plan = plan
+        self.cfg = plan.cfg
+        self.nshards = nshards
+        self.tps = plan.ntiles // nshards       # tile rows per shard
+        self.panel_width = plan.n // nshards
+        #: static code alphabet for store_codes tables (sorted dtype
+        #: names actually present in the plan's storage map)
+        self.names = tuple(sorted(
+            {plan.cfg.name_at(int(v)) for v in plan.store_levels.ravel()}))
+        self.quants = tuple(_needs_quant(nm, plan.cfg) for nm in self.names)
+
+    # -- per-shard storage map --------------------------------------------
+    def row_tiles(self, s: int) -> range:
+        return range(s * self.tps, (s + 1) * self.tps)
+
+    def store_codes(self, j: int) -> np.ndarray:
+        """(ntiles, tps) int32 table: ``codes[i, c]`` indexes
+        :attr:`names` with the storage dtype of tile ``(i, j*tps + c)``.
+        All shards share the table; shard ``s`` reads rows
+        ``s*tps .. (s+1)*tps`` (a traced index under shard_map)."""
+        cols = self.plan.store_levels[:, j * self.tps:(j + 1) * self.tps]
+        lut = {lv: self.names.index(self.cfg.name_at(int(lv)))
+               for lv in np.unique(cols)}
+        return np.vectorize(lut.__getitem__, otypes=[np.int32])(cols)
+
+    # -- local engine view -------------------------------------------------
+    def diag_plan(self, j: int) -> PrecisionPlan:
+        return self.plan.subplan(j * self.tps, (j + 1) * self.tps)
+
+    # -- collective precision ----------------------------------------------
+    def comm_level(self, j: int) -> int:
+        """Coarsest compute level among trailing consumers of panel
+        ``j``'s gathered column (lower-triangle pairs strictly below the
+        panel). The last panel has no consumers: highest level."""
+        lo = (j + 1) * self.tps
+        T = self.plan.ntiles
+        if lo >= T:
+            return int(self.plan.levels.max())
+        sub = self.plan.levels[lo:, lo:]
+        return int(sub[np.tril_indices(sub.shape[0])].min())
+
+    def comm_name(self, j: int) -> str:
+        return self.cfg.name_at(self.comm_level(j))
+
+    def comm_quant(self, j: int) -> bool:
+        return _needs_quant(self.comm_name(j), self.cfg)
+
+    def describe(self) -> str:
+        """Per-panel collective schedule (docs/ARCHITECTURE.md)."""
+        lines = [f"ShardedPlan(nshards={self.nshards}, tps={self.tps}, "
+                 f"w={self.panel_width}, ladder={self.cfg.describe()})"]
+        for j in range(self.nshards):
+            lines.append(f"  panel {j}: comm={self.comm_name(j)}"
+                         f"{' (quantized)' if self.comm_quant(j) else ''}")
+        return "\n".join(lines)
+
+    def __repr__(self):
+        return (f"ShardedPlan(n={self.plan.n}, nshards={self.nshards}, "
+                f"ladder={self.cfg.describe()})")
+
+
+def shard(plan: PrecisionPlan, nshards: int) -> ShardedPlan:
+    """Block-row partition view of ``plan`` for an ``nshards`` mesh axis."""
+    return ShardedPlan(plan, nshards)
 
 
 @functools.lru_cache(maxsize=256)

@@ -8,7 +8,7 @@ highest precision and is used for diagonal leaves — matching the paper's
 ``[F16, F16, F32]`` configurations, where precision rises toward the
 diagonal.
 
-TPU note (DESIGN.md §2): ``bf16`` is the MXU-native low precision and the
+TPU note (docs/ARCHITECTURE.md, "Precision ladder"): ``bf16`` is the MXU-native low precision and the
 recommended default; ``f16`` reproduces the paper's quantization behaviour
 bit-for-bit in spirit (narrow exponent, R_max = 65504). ``f64`` levels are
 supported on CPU for the accuracy study (enable jax_enable_x64).

@@ -11,7 +11,7 @@ statically 1 (no absmax pass is emitted).
 
 The same primitive backs the int8 error-feedback gradient compressor in
 ``repro.train.compress`` — one quantizer, two uses (solver + distributed
-training), as advertised in DESIGN.md §2.
+training); docs/ARCHITECTURE.md, "Precision ladder".
 """
 from __future__ import annotations
 

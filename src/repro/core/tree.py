@@ -5,7 +5,7 @@ The three routines are mutually recursive and unroll at *trace time*
 with Julia multiple-dispatch becomes a static DAG of mixed-precision
 GEMMs + Pallas leaf kernels that XLA schedules.
 
-Precision rule (uniform, per DESIGN.md §4.2): every tree node at recursion
+Precision rule (uniform; docs/ARCHITECTURE.md, "Execution engines"): every tree node at recursion
 ``level`` computes its GEMM in ``cfg.levels[min(level, -1)]``; every
 recursive call increments ``level``; leaves use the node's level dtype.
 Narrow dtypes (f16) get the paper's per-block quantization wrapped around
@@ -168,29 +168,53 @@ def tree_trsm_left(b, l, cfg: PrecisionConfig, *, trans: bool,
     return jnp.concatenate([x1, x2], axis=0)
 
 
-def _pad_identity_tail(a, npad: int):
-    """Embed ``a`` in an ``npad x npad`` zero matrix with a unit diagonal
-    tail — the shared body of :func:`pad_spd` and :func:`pad_factor`."""
+def _tail_scale(diag_vals):
+    """Power-of-two scale matching the matrix's diagonal magnitude.
+
+    The padding tail must sit at the DIAGONAL'S magnitude, not at 1.0:
+    a unit tail that shares a leaf tile with a large diagonal quantizes
+    to zero under the int8/f16 per-block storage rounding (singular
+    trailing block, NaN factor — the documented tree-oracle bug). A
+    power of two keeps the scale exactly representable, so the same
+    value is recovered bit-identically from either the matrix's diagonal
+    (:func:`pad_spd`) or the factor's row norms (:func:`pad_factor`),
+    and ``sqrt`` of it is the same correctly-rounded float on both
+    paths.
+    """
+    m = jnp.maximum(jnp.mean(diag_vals.astype(jnp.float32)), 1e-30)
+    # ldexp, not exp2: XLA's exp2 is not exact at integer exponents
+    return jnp.ldexp(jnp.float32(1.0),
+                     jnp.round(jnp.log2(m)).astype(jnp.int32))
+
+
+def _pad_diag_tail(a, npad: int, tail):
+    """Embed ``a`` in an ``npad x npad`` zero matrix whose diagonal tail
+    is ``tail`` — the shared body of :func:`pad_spd` / :func:`pad_factor`."""
     n = a.shape[-1]
     out = jnp.zeros((npad, npad), a.dtype)
     out = out.at[:n, :n].set(a)
-    out = out.at[jnp.arange(n, npad), jnp.arange(n, npad)].set(1.0)
-    return out
+    idx = jnp.arange(n, npad)
+    return out.at[idx, idx].set(jnp.asarray(tail, a.dtype))
 
 
 def pad_spd(a, leaf: int):
-    """Pad an SPD matrix to a multiple of ``leaf`` with an identity tail
-    (keeps SPD-ness exactly; the factor of the tail is the identity)."""
+    """Pad an SPD matrix to a multiple of ``leaf`` with a diagonal tail
+    scaled to the matrix's diagonal magnitude (keeps SPD-ness exactly;
+    the factor of the tail block is ``sqrt(tail) * I``). The scaling —
+    rather than a fixed identity tail — keeps the tail representable
+    under per-block storage quantization next to a large diagonal."""
     n = a.shape[-1]
     npad = -(-n // leaf) * leaf
     if npad == n:
         return a, n
-    return _pad_identity_tail(a, npad), n
+    return _pad_diag_tail(a, npad, _tail_scale(jnp.diagonal(a))), n
 
 
 def pad_factor(l, leaf: int):
-    """Pad a Cholesky factor to a multiple of ``leaf`` with an identity
-    tail. Because :func:`pad_spd` pads the matrix with an identity block,
+    """Pad a Cholesky factor to a multiple of ``leaf`` the way
+    :func:`pad_spd` pads the matrix. The tail scale is recovered from
+    the factor itself (``mean of row sums of squares == mean diagonal of
+    A``, rounded to the same power of two), so
     ``pad_factor(cholesky(a)[:n, :n]) == cholesky(pad_spd(a))`` exactly —
     solve paths re-pad cached factors through here instead of rebuilding
     the three ``.at[]`` writes inline on every call."""
@@ -198,4 +222,5 @@ def pad_factor(l, leaf: int):
     npad = -(-n // leaf) * leaf
     if npad == n:
         return l
-    return _pad_identity_tail(l, npad)
+    tail = jnp.sqrt(_tail_scale(jnp.sum(l.astype(jnp.float32) ** 2, axis=1)))
+    return _pad_diag_tail(l, npad, tail)

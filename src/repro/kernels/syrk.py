@@ -11,7 +11,7 @@ Two kernels:
   half (2x waste), the grid enumerates only the n_t(n_t+1)/2 lower tiles;
   the (i, j) tile coordinates are decoded from the linear triangular index
   inside the index_map. This is the flat-kernel rival we hillclimb against
-  tree-SYRK in EXPERIMENTS.md §Perf.
+  tree-SYRK in benchmarks/bench_syrk.py.
 """
 from __future__ import annotations
 

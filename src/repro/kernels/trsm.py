@@ -1,6 +1,6 @@
 """Leaf TRSM Pallas kernel: X = B @ L^{-T} for a leaf-sized L.
 
-TPU adaptation (documented in DESIGN.md §2): instead of per-column
+TPU adaptation (documented in docs/ARCHITECTURE.md, "Leaf kernels"): instead of per-column
 substitution (latency-bound on a systolic array), we invert the leaf
 triangle once in VMEM (kernels/potrf.py:tri_inv_leaf) and turn the solve
 into a GEMM, which is exactly what the MXU wants. The row dimension of B

@@ -9,7 +9,8 @@ For every (architecture x input-shape x mesh) cell:
     coherent; failures are bugs,
   * record memory_analysis(), cost_analysis(), and per-collective bytes
     parsed from the optimized HLO into experiments/dryrun/<cell>.json
-    (consumed by benchmarks/roofline.py and EXPERIMENTS.md).
+    (consumed by benchmarks/roofline.py; docs/ARCHITECTURE.md,
+    "Census and roofline").
 
 Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-2b \

@@ -213,7 +213,7 @@ def _dot_flops(instr: Instr, comp: Computation) -> float:
 # (reshape/broadcast/convert/iota/...) are excluded: on TPU they fuse
 # into consumers; the CPU HLO we parse leaves them unfused, which would
 # inflate the proxy several-fold. The result is still an upper bound on
-# TPU HBM traffic (documented in EXPERIMENTS.md §Roofline).
+# TPU HBM traffic (documented in docs/ARCHITECTURE.md, "Census and roofline").
 _MEM_OPS = {"fusion", "dot", "custom-call", "convolution", "copy",
             "dynamic-slice", "dynamic-update-slice", "gather", "scatter",
             "sort",

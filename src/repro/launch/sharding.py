@@ -37,7 +37,7 @@ def _div(n, mesh, axis):
 def make_sharder(mesh, *, multi_pod: bool, batch: int,
                  layout: str = "tp") -> Sharder:
     """layout='tp' : data-parallel over (pod,)data, TP/EP over model.
-    layout='ddp': both axes are data parallelism + ZeRO-3 (the §Perf B3
+    layout='ddp': both axes are data parallelism + ZeRO-3 (the perf-note-B3
     winner for small recurrent archs whose time-scan forbids sequence
     sharding — TP buys nothing there)."""
     batch_axes = pick_batch_axes(batch, mesh, multi_pod, layout)
@@ -99,7 +99,7 @@ def param_spec(path, leaf, cfg: ModelConfig, mesh, layout: str = "tp") -> P:
                     return P(*spec)
         return P()
     # FSDP spans the pod axis too on the multi-pod mesh (ZeRO-3 over all
-    # 512 chips — the 671B configs need it; DESIGN.md §4.6)
+    # 512 chips — the 671B configs need it; see docs/ARCHITECTURE.md)
     d = ("pod", "data") if "pod" in mesh.axis_names else "data"
     m = "model"
 

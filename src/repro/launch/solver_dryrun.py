@@ -1,6 +1,6 @@
 """Dry-run of the paper's own workload at cluster scale: distributed
 mixed-precision Cholesky of n=65536 (the paper's headline size) sharded
-over 256 chips, with both collective schedules (§Perf Cell C).
+over 256 chips, with both collective schedules (perf notes C1-C3, docs/ARCHITECTURE.md).
 
 Usage:
   PYTHONPATH=src python -m repro.launch.solver_dryrun \

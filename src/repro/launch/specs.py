@@ -89,7 +89,7 @@ def decode_inputs_struct(cfg: ModelConfig, shape: ShapeSpec):
 def pick_accum(cfg: ModelConfig, shape: ShapeSpec, mesh,
                batch_axes) -> int:
     """Grad-accumulation factor: bound per-device f32 logits + stored
-    residuals to ~1.5 GB (EXPERIMENTS.md memory budget)."""
+    residuals to ~1.5 GB (the perf-note-B1 memory budget, docs/ARCHITECTURE.md)."""
     if shape.kind != "train":
         return 1
     nb = 1

@@ -12,7 +12,8 @@ host mesh or no mesh):
   PYTHONPATH=src python -m repro.launch.train --arch gemma-2b --smoke \
       --steps 50 --optimizer tree_newton
 
-Pipeline-parallel seam (DESIGN.md §4.6): stages would slot in here as an
+Pipeline-parallel seam (docs/ARCHITECTURE.md, "Model and training
+integrations"): stages would slot in here as an
 outer scan over stage groups; the step function and sharding rules are
 stage-agnostic by construction.
 """

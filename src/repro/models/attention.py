@@ -53,7 +53,7 @@ def _chunked_causal(q, k, v, *, q_pos0, chunk):
     # The chunk step is checkpointed: without it the scan's backward
     # saves the stacked per-chunk score tensors — the full S x T
     # attention matrix, which chunking exists to avoid (flash-attention
-    # backward = recompute scores per chunk). Measured in §Perf B4.
+    # backward = recompute scores per chunk). Measured as perf note B4 (docs/ARCHITECTURE.md).
     @jax.checkpoint
     def step(carry, inp):
         ci, k_c, v_c = inp

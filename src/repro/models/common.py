@@ -135,7 +135,7 @@ def rms_norm(x, gamma, eps):
     variance reduction runs in f32 (numerics), the normalization stays in
     x.dtype. Materializing x.astype(f32) puts a [B,S,D] f32 tensor right
     at the sequence-parallel reshard point and doubles the collective
-    bytes (§Perf A4, nemotron-340b)."""
+    bytes (perf note A4, docs/ARCHITECTURE.md; nemotron-340b)."""
     var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1,
                    keepdims=True)
     inv = jax.lax.rsqrt(var + eps).astype(x.dtype)

@@ -140,7 +140,7 @@ def mamba_block(x, p, cfg: ModelConfig, sharder: Sharder, *, state=None):
                  "conv": conv_state}
     # seq-shard the residual between blocks (SP): without this the remat
     # checkpoint of every layer input is replicated over the model axis
-    # (zamba2 train_4k baseline: 47 GiB/dev; see EXPERIMENTS.md §Perf B1)
+    # (zamba2 train_4k baseline: 47 GiB/dev; see docs/ARCHITECTURE.md, "Performance notes" B1)
     return sharder.act_bsd(x + out), new_state
 
 

@@ -105,10 +105,10 @@ def _tf_block(x, p, cfg: ModelConfig, sharder: Sharder, *, use_moe: bool,
     norms run in the sharded domain (row-local); the seq all-gather is
     pinned to the *bf16 norm output* via act_full — without the pin the
     SPMD partitioner reshards the norm's f32 internals, doubling the
-    gather/all-reduce bytes (§Perf A1, nemotron-340b)."""
+    gather/all-reduce bytes (perf note A1, docs/ARCHITECTURE.md; nemotron-340b)."""
     # The act_full pin helps exactly when attention is head-sharded over
     # the model axis (the big-TP archs: −61 % collectives on
-    # nemotron-340b, §Perf A1); when heads don't divide the axis (gemma's
+    # nemotron-340b, perf note A1); when heads don't divide the axis (gemma's
     # 8 heads on 16-way TP) the pin forces gathers GSPMD would otherwise
     # avoid (+3.2x collectives measured) — so it is conditional.
     pin = sharder._fits(cfg.n_heads) if cfg.n_heads else False
@@ -127,7 +127,7 @@ def _tf_block(x, p, cfg: ModelConfig, sharder: Sharder, *, use_moe: bool,
     a, kv = attn_fn(h, p["attn"], cfg, sharder, pos=pos, cache=cache)
     # constrain the branch output seq-sharded BEFORE the residual add:
     # the TP contraction's all-reduce becomes a reduce-scatter (half the
-    # bytes) and the add runs fully in the sharded domain (§Perf A3)
+    # bytes) and the add runs fully in the sharded domain (perf note A3)
     x = x + (sharder.act_bsd(a) if pin else a)
     h = norm_then_gather(x, p["ln2"])
     aux = jnp.float32(0.0)
@@ -299,7 +299,7 @@ def _forward_hybrid(params, x, cfg: ModelConfig, sharder: Sharder, *,
     if cfg.remat:
         # the shared block runs outside the layer scan; without its own
         # checkpoint every application's attention intermediates are
-        # live until backward (zamba2 §Perf B2: 47 GiB/dev baseline)
+        # live until backward (zamba2 perf note B2: 47 GiB/dev baseline)
         shared_block = jax.checkpoint(shared_block)
 
     for g in range(n_apps):

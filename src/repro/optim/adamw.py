@@ -1,7 +1,7 @@
 """AdamW with configurable state dtype + cosine schedule + global clip.
 
 State dtype matters at 671B scale: bf16 m/v keep the optimizer inside
-16 GB/chip HBM (see EXPERIMENTS.md memory budget); f32 master moments are
+16 GB/chip HBM (see docs/ARCHITECTURE.md, "Performance notes" B1); f32 master moments are
 the default for <100B models.
 """
 from __future__ import annotations

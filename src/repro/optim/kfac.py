@@ -1,5 +1,5 @@
 """Tree-Newton: Kronecker-factored preconditioning whose SPD solves run
-through the paper's mixed-precision tree-Cholesky (DESIGN.md §4.5).
+through the paper's mixed-precision tree-Cholesky (docs/ARCHITECTURE.md, "Model and training integrations").
 
 This is the production integration of the paper's solver into the LM
 trainer: per-matrix second-moment factors

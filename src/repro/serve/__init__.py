@@ -2,4 +2,4 @@ from repro.serve.engine import (SolveInfo, SolverEngine,  # noqa: F401
                                 generate, matrix_fingerprint, prefill_step,
                                 serve_step)
 from repro.serve.scheduler import (BatchScheduler,  # noqa: F401
-                                   SolveRequest)
+                                   SchedulerOverload, SolveRequest)

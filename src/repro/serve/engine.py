@@ -23,15 +23,20 @@ from __future__ import annotations
 import collections
 import dataclasses
 import functools
+import threading
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.core.blocked import diag_tri_inv
+from repro.core.distributed import dist_cholesky, dist_cholesky_solve
 from repro.core.precision import PAPER_CONFIGS, PrecisionConfig
-from repro.core.refine import RefineConfig, RefineResult
+from repro.core.refine import (RefineConfig, RefineResult, gmres_operator,
+                               refine_operator, scaled_solve)
 from repro.core.solve import cholesky_padded, refine_solve
+from repro.kernels import ops
 from repro.models import transformer as T
 from repro.models.common import ModelConfig, NO_SHARD, Sharder
 
@@ -115,6 +120,7 @@ class SolveInfo:
     factor_cached: bool         # True if the factor was reused
     batch_size: int = 1         # requests sharing this refine call
     batch_index: int = 0        # this request's slot in the batch
+    distributed: bool = False   # factor/solves ran on the engine's mesh
 
 
 class SolverEngine:
@@ -142,6 +148,18 @@ class SolverEngine:
     RHS sharing a factor into ONE multi-RHS refine call with per-column
     accuracy targets, so easy requests stop sweeping while hard
     neighbors continue.
+
+    **Multi-device mode** (docs/SERVING.md, "Multi-device mode"): pass
+    ``mesh=`` to route factorizations of matrices at or above
+    ``dist_threshold`` (whose size divides the mesh axis times the leaf)
+    through the distributed block-panel solver
+    (:func:`repro.core.distributed.dist_cholesky`), with every
+    refinement sweep's correction solve running distributed too
+    (:func:`~repro.core.distributed.dist_cholesky_solve`). The factor
+    cache then stores the SHARDED factor per fingerprint — cache hits
+    reuse device-resident shards, no re-gather. Smaller or non-divisible
+    matrices fall back to the single-device path; ``SolveInfo
+    .distributed`` records which path served each request.
     """
 
     #: digits attainable by the residual precision (with ~1 digit margin)
@@ -149,7 +167,9 @@ class SolverEngine:
 
     def __init__(self, ladder: str | PrecisionConfig = "bf16_f32", *,
                  max_sweeps: int = 10, gmres_restart: int = 16,
-                 max_cached_factors: int = 16):
+                 max_cached_factors: int = 16, mesh=None,
+                 dist_threshold: int = 2048, dist_axis: str = "model",
+                 dist_compress: bool = True):
         if isinstance(ladder, str):
             self.ladder_name = ladder
             self.cfg = PAPER_CONFIGS[ladder]
@@ -160,9 +180,31 @@ class SolverEngine:
         self.gmres_restart = gmres_restart
         assert max_cached_factors >= 1, max_cached_factors
         self.max_cached_factors = max_cached_factors
+        self.mesh = mesh
+        self.dist_threshold = dist_threshold
+        self.dist_axis = dist_axis
+        self.dist_compress = dist_compress
+        if mesh is not None:
+            assert dist_axis in mesh.shape, (dist_axis, mesh)
         #: cache_key -> (fingerprint, padded factor, diag-tile inverses),
-        #: most-recently-used last
+        #: most-recently-used last; in mesh mode the factor entry is the
+        #: block-row-sharded L. Guarded by ``_cache_lock``: the async
+        #: scheduler's drain worker shares this cache with direct-call
+        #: engine users on other threads.
         self._factors: collections.OrderedDict = collections.OrderedDict()
+        self._cache_lock = threading.RLock()
+
+    def _use_dist(self, n: int) -> bool:
+        """True when a size-``n`` solve takes the distributed path.
+
+        Deterministic in ``n`` so :meth:`_factorize` and
+        :meth:`solve_batched` always agree on what a cached factor is.
+        """
+        if self.mesh is None:
+            return False
+        nshards = self.mesh.shape[self.dist_axis]
+        return (n >= self.dist_threshold
+                and n % (nshards * self.cfg.leaf) == 0)
 
     def _clamp(self, target_digits: float) -> float:
         rname = "f64" if jax.config.jax_enable_x64 else "f32"
@@ -175,11 +217,60 @@ class SolverEngine:
         semantics) so non-multiple-of-leaf solves skip re-padding on
         every request, and ``linvs`` lets every refinement sweep's pair
         of triangular solves reuse the one-off leaf inversions.
+
+        In mesh mode, matrices :meth:`_use_dist` accepts are factorized
+        by the distributed block-panel engine instead; the cached factor
+        is then the block-row-sharded L (no ``linvs`` — the distributed
+        solve inverts its diagonal blocks per shard).
         """
+        a = jnp.asarray(a)
+        if self._use_dist(a.shape[-1]):
+            a_sh = jax.device_put(a, NamedSharding(
+                self.mesh, PartitionSpec(self.dist_axis, None)))
+            l = dist_cholesky(a_sh, self.mesh, self.cfg,
+                              axis=self.dist_axis,
+                              compress_comm=self.dist_compress)
+            return l, None
         l = cholesky_padded(a, self.cfg)
         linvs = (diag_tri_inv(l, self.cfg)
                  if self.cfg.engine == "blocked" else None)
         return l, linvs
+
+    def _dist_refine(self, a, bmat, rcfg: RefineConfig, l,
+                     col_tol) -> RefineResult:
+        """Refinement loop whose correction solves run on the mesh.
+
+        Same contract as :func:`repro.core.solve.refine_solve` (which
+        backs the single-device path), but the base solve and every
+        sweep's correction go through
+        :func:`~repro.core.distributed.dist_cholesky_solve` against the
+        sharded factor; residuals form in the residual precision via the
+        fused-residual dispatch like the local path.
+        """
+        rdtype = rcfg.rdtype()
+        mesh, axis, cfg = self.mesh, self.dist_axis, self.cfg
+        # keep A block-row-sharded for the sweep GEMMs too: the per-sweep
+        # matvec/residual is the dominant O(n^2 k) term, and a replicated
+        # A would run it on one device
+        a_r = jax.device_put(jnp.asarray(a, rdtype), NamedSharding(
+            mesh, PartitionSpec(axis, None)))
+        b_r = jnp.asarray(bmat, rdtype)
+
+        def base_solve(r):
+            x = dist_cholesky_solve(a, r.astype(l.dtype), mesh, cfg,
+                                    axis=axis, l=l)
+            return x.astype(rdtype)
+
+        def matvec(x):
+            return a_r @ x
+
+        def resid(x):
+            return ops.residual(a_r, x, b_r, impl=cfg.kernel_impl)
+
+        correct = scaled_solve(base_solve)
+        x0 = base_solve(b_r)    # unscaled, like iterative_refine
+        run = gmres_operator if rcfg.method == "gmres" else refine_operator
+        return run(matvec, correct, b_r, x0, rcfg, resid=resid, tol=col_tol)
 
     def factor(self, a, cache_key=None, *, fingerprint=None):
         """Factorize (or fetch the cached factor for) ``a``.
@@ -199,23 +290,27 @@ class SolverEngine:
             l, linvs = self._factorize(a)
             return l, linvs, False
         fp = fingerprint if fingerprint is not None else matrix_fingerprint(a)
-        hit = self._factors.get(cache_key)
-        if hit is not None and hit[0] == fp:
-            self._factors.move_to_end(cache_key)
-            return hit[1], hit[2], True
+        with self._cache_lock:
+            hit = self._factors.get(cache_key)
+            if hit is not None and hit[0] == fp:
+                self._factors.move_to_end(cache_key)
+                return hit[1], hit[2], True
         l, linvs = self._factorize(a)
-        self._factors[cache_key] = (fp, l, linvs)
-        self._factors.move_to_end(cache_key)
-        while len(self._factors) > self.max_cached_factors:
-            self._factors.popitem(last=False)
+        with self._cache_lock:
+            self._factors[cache_key] = (fp, l, linvs)
+            self._factors.move_to_end(cache_key)
+            while len(self._factors) > self.max_cached_factors:
+                self._factors.popitem(last=False)
         return l, linvs, False
 
     def evict(self, cache_key):
-        self._factors.pop(cache_key, None)
+        with self._cache_lock:
+            self._factors.pop(cache_key, None)
 
     def cached_keys(self):
         """Cache keys currently held, least-recently-used first."""
-        return list(self._factors)
+        with self._cache_lock:
+            return list(self._factors)
 
     def solve(self, a, b, *, target_digits: float = 6.0,
               method: str = "ir", cache_key=None):
@@ -261,9 +356,14 @@ class SolverEngine:
         l, linvs, cached = self.factor(a, cache_key, fingerprint=fingerprint)
         bmat = jnp.concatenate(
             [b[:, None] if b.ndim == 1 else b for b in bs], axis=1)
-        res: RefineResult = refine_solve(a, bmat, self.cfg, refine=rcfg,
-                                         l=l, col_tol=jnp.asarray(col_tol),
-                                         linvs=linvs)
+        dist = self._use_dist(n)
+        if dist:
+            res: RefineResult = self._dist_refine(
+                a, bmat, rcfg, l, jnp.asarray(col_tol))
+        else:
+            res = refine_solve(a, bmat, self.cfg, refine=rcfg,
+                               l=l, col_tol=jnp.asarray(col_tol),
+                               linvs=linvs)
         sweeps = np.atleast_1d(np.asarray(res.iterations))
         resid = np.atleast_1d(np.asarray(res.residual))
         conv = np.atleast_1d(np.asarray(res.converged))
@@ -279,7 +379,7 @@ class SolverEngine:
                 residual=float(resid[sl].max()),
                 converged=bool(conv[sl].all()),
                 target_digits=digits[i], factor_cached=cached,
-                batch_size=len(bs), batch_index=i))
+                batch_size=len(bs), batch_index=i, distributed=dist))
             off += k
         return xs, infos
 

@@ -31,16 +31,43 @@ Ordering guarantees (tested in tests/test_serve.py):
 This is a host-side loop by design (requests arrive from Python-land
 callers); the jit boundary is the stacked refine call inside
 ``SolverEngine.solve_batched``.
+
+**Async drain** (docs/SERVING.md, "Sync vs async drain"): with
+``max_wait_ms`` set and :meth:`BatchScheduler.start` called, a
+background worker thread drains the queue continuously.
+:meth:`~BatchScheduler.submit_async` returns a
+:class:`concurrent.futures.Future`; the worker opens a deadline-aware
+batching window when the first request of a burst arrives, keeps
+collecting arrivals until the oldest pending request has waited
+``max_wait_ms`` (or the window holds ``max_batch`` columns), then runs
+one drain and resolves the futures. Simple admission control guards the
+factor cache: a submission whose matrix would push the number of
+DISTINCT pending factors past ``max_pending_factors`` (default: the
+engine's ``max_cached_factors``) is rejected with
+:class:`SchedulerOverload` instead of queued — a window with more
+distinct matrices than cache slots would evict factors still needed by
+later groups of the same window (thrash), so the backpressure lands on
+the client that would cause it.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
+import time
 import weakref
+from concurrent.futures import Future
 from typing import Any
 
 import jax.numpy as jnp
 
 from repro.serve.engine import SolveInfo, SolverEngine, matrix_fingerprint
+
+
+class SchedulerOverload(RuntimeError):
+    """Submission rejected by admission control (factor cache would
+    thrash). Clients should back off and resubmit, or raise the
+    engine's ``max_cached_factors`` / the scheduler's
+    ``max_pending_factors``."""
 
 
 @dataclasses.dataclass
@@ -64,13 +91,34 @@ class BatchScheduler:
     ``engine`` owns the factor cache, so batching composes with factor
     reuse ACROSS drains: the first drain factorizes once per distinct
     matrix, later drains hit the fingerprint-checked LRU cache.
+
+    With ``max_wait_ms`` set, :meth:`start` spawns a background worker
+    and :meth:`submit_async` returns futures — the deadline-aware async
+    request loop (module docstring; lifecycle in docs/SERVING.md).
+    ``drain()`` stays available for synchronous use, but don't mix the
+    two styles on one scheduler instance: the worker assumes it is the
+    only drainer.
     """
 
     def __init__(self, engine: SolverEngine | None = None, *,
-                 max_batch: int = 32):
+                 max_batch: int = 32, max_wait_ms: float | None = None,
+                 max_pending_factors: int | None = None):
         assert max_batch >= 1, max_batch
         self.engine = engine if engine is not None else SolverEngine()
         self.max_batch = max_batch
+        #: async batching window; None = sync-only scheduler
+        self.max_wait_ms = max_wait_ms
+        #: admission-control bound on distinct pending factors
+        self.max_pending_factors = (
+            max_pending_factors if max_pending_factors is not None
+            else self.engine.max_cached_factors)
+        assert self.max_pending_factors >= 1, self.max_pending_factors
+        self._lock = threading.RLock()
+        self._cv = threading.Condition(self._lock)
+        self._worker: threading.Thread | None = None
+        self._stop_flag = False
+        self._window_start: float | None = None
+        self._futures: dict[int, Future] = {}
         self._queue: list[SolveRequest] = []
         self._fingerprints: dict[int, Any] = {}   # request_id -> fp
         self._next_id = 0
@@ -94,15 +142,135 @@ class BatchScheduler:
         b = jnp.asarray(b)
         assert b.ndim in (1, 2), b.shape
         assert method in ("ir", "gmres"), method
-        rid = self._next_id
-        self._next_id += 1
-        req = SolveRequest(rid, a, b, float(target_digits), method,
-                           cache_key, 1 if b.ndim == 1 else b.shape[1])
         # fingerprint at submit time so grouping can never batch two
         # different matrices that happen to share a cache_key
-        self._fingerprints[rid] = self._fingerprint_of(a)
-        self._queue.append(req)
+        fp = self._fingerprint_of(a)
+        with self._cv:
+            rid = self._next_id
+            self._next_id += 1
+            req = SolveRequest(rid, a, b, float(target_digits), method,
+                               cache_key, 1 if b.ndim == 1 else b.shape[1])
+            self._fingerprints[rid] = fp
+            if not self._queue:
+                self._window_start = time.monotonic()
+            self._queue.append(req)
+            self._cv.notify_all()
         return rid
+
+    # -- async drain --------------------------------------------------------
+    def submit_async(self, a, b, *, target_digits: float = 6.0,
+                     method: str = "ir", cache_key=None) -> Future:
+        """Enqueue a solve for the background worker; returns a Future
+        resolving to ``(x, SolveInfo)``.
+
+        Requires a running worker (:meth:`start`). Raises
+        :class:`SchedulerOverload` when admission control rejects the
+        request (the submission would put more distinct factors in
+        flight than the factor cache holds).
+        """
+        fp = self._fingerprint_of(a)
+        with self._cv:
+            assert self._worker is not None, (
+                "submit_async needs the async worker: call start() first")
+            self._admit((cache_key, fp))
+            rid = self.submit(a, b, target_digits=target_digits,
+                              method=method, cache_key=cache_key)
+            fut: Future = Future()
+            self._futures[rid] = fut
+        return fut
+
+    def _admit(self, key):
+        """Reject a NEW distinct factor when the pending set is full."""
+        pending = {(r.cache_key, self._fingerprints[r.request_id])
+                   for r in self._queue}
+        if key not in pending and len(pending) >= self.max_pending_factors:
+            raise SchedulerOverload(
+                f"{len(pending)} distinct factors already pending "
+                f"(max_pending_factors={self.max_pending_factors})")
+
+    def start(self) -> None:
+        """Spawn the background drain worker (idempotent)."""
+        assert self.max_wait_ms is not None, (
+            "async drain needs a batching window: pass max_wait_ms")
+        with self._cv:
+            if self._worker is not None:
+                if self._worker.is_alive():
+                    return                   # one drainer only
+                self._worker = None          # finished after a timed-out stop
+            self._stop_flag = False
+            self._worker = threading.Thread(
+                target=self._run, name="BatchScheduler-drain", daemon=True)
+            self._worker.start()
+
+    def stop(self, timeout: float | None = None) -> None:
+        """Stop the worker; pending requests are drained first.
+
+        If ``timeout`` expires while the worker is still mid-drain, the
+        worker stays registered (and stopping): a later :meth:`start`
+        is a no-op until it actually exits, so two drainers can never
+        race one queue.
+        """
+        with self._cv:
+            worker = self._worker
+            if worker is None:
+                return
+            self._stop_flag = True
+            self._cv.notify_all()
+        worker.join(timeout)
+        with self._cv:
+            if not worker.is_alive():
+                self._worker = None
+
+    def _pending_cols(self) -> int:
+        return sum(r.n_cols for r in self._queue)
+
+    def _run(self):
+        """Worker loop: deadline-aware batching window, then one drain.
+
+        The window opens when the first request of a burst arrives
+        (``submit`` stamps ``_window_start``) and closes when the oldest
+        pending request has waited ``max_wait_ms`` or the queue holds a
+        full batch — so a lone request never waits longer than the
+        window, while a burst inside it batches into one refine call.
+        """
+        while True:
+            with self._cv:
+                while not self._queue and not self._stop_flag:
+                    self._cv.wait()
+                if not self._queue:         # stop requested, queue empty
+                    return
+                deadline = self._window_start + self.max_wait_ms / 1e3
+                while (not self._stop_flag
+                       and self._pending_cols() < self.max_batch):
+                    left = deadline - time.monotonic()
+                    if left <= 0:
+                        break
+                    self._cv.wait(left)
+            try:
+                results = self.drain()
+            except Exception as exc:  # noqa: BLE001 — forwarded to futures
+                with self._cv:
+                    for req in self.failed:
+                        fut = self._futures.pop(req.request_id, None)
+                        if fut is not None:
+                            fut.set_exception(exc)
+                    # flush results completed before the failure straight
+                    # to their futures; results of SYNC-submitted
+                    # requests stay stashed for the next drain() to
+                    # return. Re-queued requests ride the next window.
+                    stashed, self._stashed = self._stashed, {}
+                    for rid, out in stashed.items():
+                        fut = self._futures.pop(rid, None)
+                        if fut is not None:
+                            fut.set_result(out)
+                        else:
+                            self._stashed[rid] = out
+                continue
+            with self._cv:
+                for rid, out in results.items():
+                    fut = self._futures.pop(rid, None)
+                    if fut is not None:
+                        fut.set_result(out)
 
     def _fingerprint_of(self, a):
         """Memoized matrix_fingerprint: the O(n) device reduction + host
@@ -139,7 +307,10 @@ class BatchScheduler:
         retrying a deterministically failing batch would wedge every
         subsequent drain).
         """
-        queue, self._queue = self._queue, []
+        with self._lock:
+            queue, self._queue = self._queue, []
+            results, self._stashed = self._stashed, {}
+            self.failed = []
         groups: list[list[SolveRequest]] = []
         index: dict[Any, int] = {}
         for req in queue:                       # FIFO by first arrival
@@ -149,8 +320,6 @@ class BatchScheduler:
             else:
                 index[key] = len(groups)
                 groups.append([req])
-        results, self._stashed = self._stashed, {}
-        self.failed = []
         in_flight: list[SolveRequest] = []
         try:
             for members in groups:
@@ -169,14 +338,15 @@ class BatchScheduler:
         except BaseException:
             # only a chunk whose solve actually raised is abandoned; an
             # interrupt between chunks re-queues everything unprocessed
-            self.failed = list(in_flight)
-            dropped = {r.request_id for r in in_flight}
-            for rid in dropped:
-                self._fingerprints.pop(rid, None)
-            self._stashed = results
-            self._queue = [r for r in queue
-                           if r.request_id not in results
-                           and r.request_id not in dropped] + self._queue
+            with self._lock:
+                self.failed = list(in_flight)
+                dropped = {r.request_id for r in in_flight}
+                for rid in dropped:
+                    self._fingerprints.pop(rid, None)
+                self._stashed = results
+                self._queue = [r for r in queue
+                               if r.request_id not in results
+                               and r.request_id not in dropped] + self._queue
             raise
         return results
 

@@ -4,7 +4,7 @@ The paper's per-block quantizer (repro.core.quantize) reused for the
 distributed-training side: cross-replica gradient reduction in int8 with
 an error-feedback residual, the standard compressed-DDP trick. At pod
 scale this is applied on the *inter-pod* stage of a hierarchical
-all-reduce where links are slowest (DESIGN.md §4.6).
+all-reduce where links are slowest (docs/ARCHITECTURE.md, "Model and training integrations").
 
 ef_allreduce_mean is a per-shard function meant to run inside shard_map
 over the reduction axis; tests/test_train.py runs a full mini data-

@@ -46,18 +46,11 @@ def _engines(name):
 @pytest.mark.parametrize("n", [384, 1000])
 def test_factor_equivalence(name, n):
     """engine="blocked" matches engine="tree" to the ladder's roundoff
-    (multi-tile sizes, including a non-multiple-of-leaf one).
-
-    int8 ladders compare on multiple-of-leaf sizes only: the tree
-    oracle's always-scaled per-block rounding quantizes the identity
-    padding tail to zero whenever it shares a leaf block with the
-    matrix's large diagonal (singular trailing block, NaN factor) —
-    see test_blocked_survives_padded_int8 for the blocked engine's
-    behaviour on exactly that case.
+    (multi-tile sizes, including a non-multiple-of-leaf one — ragged
+    int8 sizes included, now that ``pad_spd`` scales its diagonal tail
+    to the matrix's magnitude; see test_tree_survives_padded_int8).
     """
     cfg_b, cfg_t = _engines(name)
-    if "int8" in name:
-        n = {384: 512, 1000: 768}[n]
     a = spd(n, seed=n)
     lb = np.asarray(core.cholesky(a, cfg_b), np.float64)
     lt = np.asarray(core.cholesky(a, cfg_t), np.float64)
@@ -83,9 +76,7 @@ def test_factor_bitwise_single_tile(name):
 def test_solve_equivalence_multirhs(name, nrhs):
     """Blocked solves agree with tree solves: both residuals sit at the
     ladder's accuracy and the solutions track each other."""
-    # 900 pads to 1024 (ragged path); int8 avoids the tree oracle's
-    # padded-tail quantization hazard (see test_factor_equivalence)
-    n = 768 if "int8" in name else 900
+    n = 900    # pads to 1024 (ragged path, int8 included post-tail-fix)
     cfg_b, cfg_t = _engines(name)
     a = spd(n, seed=3)
     b = (RNG.standard_normal((n, nrhs)) if nrhs > 1
@@ -101,18 +92,45 @@ def test_solve_equivalence_multirhs(name, nrhs):
 
 
 def test_blocked_survives_padded_int8():
-    """Regression: an int8 ladder on a non-multiple-of-leaf size. The
-    tree oracle's per-block storage rounding quantizes the identity
-    padding tail against the matrix's large diagonal and collapses it
-    to zero (singular trailing block -> NaN); the blocked plan stores
-    trailing tiles at their own (deeper, wider) level and stays finite
-    and accurate."""
+    """Regression: an int8 ladder on a non-multiple-of-leaf size stays
+    finite and accurate under the blocked engine (it stores trailing
+    tiles at their own deeper level, so it was immune to the pad-tail
+    bug even before the tail fix)."""
     a = spd(384, seed=384)
     l = np.asarray(core.cholesky(a, core.PAPER_CONFIGS["int8_f32"]),
                    np.float64)
     assert np.isfinite(l).all()
     ref = np.linalg.cholesky(a.astype(np.float64))
     assert np.abs(l - ref).max() / np.abs(ref).max() < 4e-2
+
+
+@pytest.mark.parametrize("name", ["int8_f32", "int8x3_f32"])
+def test_tree_survives_padded_int8(name):
+    """Regression for the documented tree-oracle bug (ROADMAP): int8
+    ladders NaN'd on non-multiple-of-leaf sizes because ``pad_spd``'s
+    unit identity tail quantized to zero when it shared a leaf block
+    with the matrix's large diagonal (singular trailing block). The
+    tail is now scaled to the diagonal's magnitude, so the tree engine
+    must stay finite and match the f64 reference on exactly that case."""
+    a = spd(384, seed=384)
+    cfg = dataclasses.replace(core.PAPER_CONFIGS[name], engine="tree")
+    l = np.asarray(core.cholesky(a, cfg), np.float64)
+    assert np.isfinite(l).all()
+    ref = np.linalg.cholesky(a.astype(np.float64))
+    assert np.abs(l - ref).max() / np.abs(ref).max() < 4e-2
+
+
+def test_pad_spd_tail_tracks_diagonal_magnitude():
+    """The padding tail sits at the diagonal's (power-of-two) magnitude
+    and pad_factor recovers the exact same scale from the factor."""
+    a = spd(300, seed=2) * 64.0
+    a_p, n = core.pad_spd(jnp.asarray(a), 128)
+    tail = np.asarray(a_p)[range(n, 384), range(n, 384)]
+    assert (tail == tail[0]).all() and tail[0] > 1.0
+    frac, _ = np.frexp(float(tail[0]))
+    assert frac == 0.5                       # exact power of two
+    mag = np.abs(np.diagonal(a)).mean()
+    assert mag / 2 <= tail[0] <= mag * 2
 
 
 def test_refine_equivalence():

@@ -1,6 +1,7 @@
 """Elastic fault-tolerance: a checkpoint written under one mesh resumes
 bit-exactly under a different device count (8 -> 4 -> 1) — the node-
-failure / rescale story from DESIGN.md §4.7. Needs 8 host devices (run
+failure / rescale story (docs/ARCHITECTURE.md, "Model and training
+integrations"). Needs 8 host devices (run
 via tests/test_multidevice.py)."""
 import jax
 import jax.numpy as jnp

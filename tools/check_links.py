@@ -1,0 +1,82 @@
+#!/usr/bin/env python
+"""Fail on broken intra-repo links in README.md and docs/*.md.
+
+Checks every markdown link/image target that is not an external URL:
+
+* the referenced file must exist (relative to the file containing the
+  link, or to the repo root if it starts with ``/``),
+* a ``#fragment`` on a markdown target must match a heading in the
+  referenced file (GitHub anchor slug rules, simplified).
+
+Run from anywhere: ``python tools/check_links.py``. CI runs it in the
+lint job so a renamed doc or section can't leave dangling references —
+the repo's docstrings point at docs/ARCHITECTURE.md sections, so those
+anchors are load-bearing.
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+_EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def _slug(heading: str) -> str:
+    """GitHub-style anchor slug (simplified: enough for our docs)."""
+    h = re.sub(r"[`*_]", "", heading.strip().lower())
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def _anchors(path: str) -> set[str]:
+    with open(path, encoding="utf-8") as f:
+        return {_slug(m.group(1)) for m in _HEADING.finditer(f.read())}
+
+
+def check(files: list[str]) -> list[str]:
+    errors = []
+    for md in files:
+        base = os.path.dirname(md)
+        with open(md, encoding="utf-8") as f:
+            text = f.read()
+        for m in _LINK.finditer(text):
+            target = m.group(1)
+            if target.startswith(_EXTERNAL):
+                continue
+            target, _, frag = target.partition("#")
+            rel = os.path.relpath(md, ROOT)
+            if not target:               # same-file fragment
+                if frag and _slug(frag) not in _anchors(md):
+                    errors.append(f"{rel}: missing anchor #{frag}")
+                continue
+            dest = (os.path.join(ROOT, target.lstrip("/"))
+                    if target.startswith("/") else os.path.join(base, target))
+            dest = os.path.normpath(dest)
+            if not os.path.exists(dest):
+                errors.append(f"{rel}: broken link -> {target}")
+            elif frag and dest.endswith(".md") and \
+                    _slug(frag) not in _anchors(dest):
+                errors.append(f"{rel}: missing anchor {target}#{frag}")
+    return errors
+
+
+def main() -> int:
+    files = [os.path.join(ROOT, "README.md")] + sorted(
+        glob.glob(os.path.join(ROOT, "docs", "*.md")))
+    files = [f for f in files if os.path.exists(f)]
+    errors = check(files)
+    for e in errors:
+        print(f"BROKEN: {e}")
+    print(f"checked {len(files)} files: "
+          f"{'FAIL' if errors else 'OK'} ({len(errors)} broken)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
