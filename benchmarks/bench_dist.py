@@ -9,10 +9,18 @@ Races the two levers the distributed engine added on a forced
 * COLLECTIVES — plan-compressed gathers (``compress_comm=True``, the
   16-bit/int8 wire format chosen per panel by the sharded plan) vs full
   f32 gathers, both on the blocked local engine.
+* TUNED SELECTION — what the committed tuning database (repro.tune)
+  picks for each size: the tuned engine, its provenance, and whether
+  ``engine="auto"`` traces to the identical computation. This is the
+  measured resolution of the n=1024 tree-vs-blocked flip: below the
+  DB crossover the tuned engine must be the tree
+  (``speedup_tuned_vs_tree == 1.0`` there by construction).
 
 Writes ``BENCH_dist.json`` at the repo root for CI's dist gate
-(compressed collectives must not be slower than f32 gathers at
-n >= 2048) and emits the usual ``name,us_per_call,derived`` CSV rows.
+(``tools/perf_gate.py dist``: compressed collectives must not be slower
+than f32 gathers at n >= 2048, and the tuned engine must win its side
+of the crossover) and emits the usual ``name,us_per_call,derived`` CSV
+rows.
 Requires a session started with --xla_force_host_platform_device_count=4
 (benchmarks/run.py and CI's dist-smoke job launch it correctly); skips
 otherwise.
@@ -29,6 +37,8 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from benchmarks.util import emit, spd_matrix, timeit
+from repro import tune
+from repro.tune.search import race
 from repro.core import PrecisionConfig, cholesky
 from repro.core.distributed import dist_cholesky
 from repro.launch.mesh import make_mesh
@@ -61,27 +71,55 @@ def run(sizes=(1024, 2048), json_path=None):
         row = {"n": n, "ladder": "bf16_f32", "leaf": cfg.leaf,
                "nshards": NSHARDS}
         with mesh:
-            # local-engine race (full gathers: same comm both sides)
-            for eng in ("tree", "blocked"):
+            # one interleaved race over all four candidates (tune.search
+            # .race: fresh executable per round, per-candidate min) —
+            # sequential one-shot timing here let a sticky slow
+            # compile/allocation layout tax a single candidate ~1.4x and
+            # fake an engine flip. Local engines run on full-precision
+            # gathers (same comm both sides); the collective pair both
+            # run the blocked engine.
+            def make(cfg_e, cc):
+                return lambda: (
+                    jax.jit(functools.partial(dist_cholesky, mesh=mesh,
+                                              cfg=cfg_e, compress_comm=cc)),
+                    (jax.device_put(a, NamedSharding(mesh,
+                                                     P("model", None))),))
+            cands = {
+                "us_local_tree":
+                    make(dataclasses.replace(cfg, engine="tree"), False),
+                "us_local_blocked":
+                    make(dataclasses.replace(cfg, engine="blocked"), False),
+                "us_comm_f32_gather": make(cfg, False),
+                "us_comm_compressed": make(cfg, True),
+            }
+            timer = functools.partial(timeit, warmup=2, iters=7)
+            for key, t in race(timer, cands).items():
+                row[key] = round(t, 1)
+                emit(f"dist_potrf_{key[3:]}_n{n}_p{NSHARDS}", t,
+                     f"devices={NSHARDS}")
+            fn_c, args_c = make(cfg, True)()
+            l = np.asarray(fn_c(*args_c), np.float64)
+            # tuned selection: what the committed DB picks for this key,
+            # and whether engine="auto" traces to that exact computation
+            dec = tune.decide(n, "bf16_f32", NSHARDS)
+            row["tuned_engine"] = dec.engine
+            row["tuned_source"] = dec.source
+            db = tune.get_default_db()
+            cx = db.crossover("bf16_f32", NSHARDS) if db else None
+            row["tuned_crossover_n"] = cx["n"] if cx else None
+            row["us_local_tuned"] = row[f"us_local_{dec.engine}"]
+            eqns = {}
+            for tag, eng in (("auto", "auto"), ("tuned", dec.engine)):
                 cfg_e = dataclasses.replace(cfg, engine=eng)
-                fn = jax.jit(functools.partial(
+                jaxpr = jax.make_jaxpr(functools.partial(
                     dist_cholesky, mesh=mesh, cfg=cfg_e,
-                    compress_comm=False))
-                t = timeit(fn, a_sh, warmup=2, iters=7)
-                row[f"us_local_{eng}"] = round(t, 1)
-                emit(f"dist_potrf_local_{eng}_n{n}_p{NSHARDS}", t,
-                     f"devices={NSHARDS}")
-            # collective race (blocked engine both sides)
-            for tag, cc in (("f32_gather", False), ("compressed", True)):
-                fn = jax.jit(functools.partial(
-                    dist_cholesky, mesh=mesh, cfg=cfg, compress_comm=cc))
-                t = timeit(fn, a_sh, warmup=2, iters=7)
-                row[f"us_comm_{tag}"] = round(t, 1)
-                emit(f"dist_potrf_comm_{tag}_n{n}_p{NSHARDS}", t,
-                     f"devices={NSHARDS}")
-            l = np.asarray(fn(a_sh), np.float64)
+                    compress_comm=False))(a_sh)
+                eqns[tag] = len(jaxpr.eqns)
+            row["auto_matches_tuned"] = eqns["auto"] == eqns["tuned"]
         row["speedup_blocked_vs_tree"] = round(
             row["us_local_tree"] / row["us_local_blocked"], 3)
+        row["speedup_tuned_vs_tree"] = round(
+            row["us_local_tree"] / row["us_local_tuned"], 3)
         row["speedup_compressed_vs_f32"] = round(
             row["us_comm_f32_gather"] / row["us_comm_compressed"], 3)
         # agreement with the single-device planned engine
@@ -93,6 +131,10 @@ def run(sizes=(1024, 2048), json_path=None):
              f"blocked_vs_tree={row['speedup_blocked_vs_tree']};"
              f"compressed_vs_f32={row['speedup_compressed_vs_f32']};"
              f"rel={rel:.2e}")
+        emit(f"dist_potrf_tuned_n{n}", row["us_local_tuned"],
+             f"engine={row['tuned_engine']};source={row['tuned_source']};"
+             f"crossover_n={row['tuned_crossover_n']};"
+             f"auto_matches={row['auto_matches_tuned']}")
         rows.append(row)
     path = json_path or os.path.join(_ROOT, "BENCH_dist.json")
     with open(path, "w") as f:

@@ -20,6 +20,13 @@ them as subprocesses.
 ``--smoke`` shrinks every bench to CI-sized problems (propagated to
 subprocesses via REPRO_BENCH_SMOKE=1); ``--out results.json`` writes all
 rows as a JSON artifact so CI tracks the perf trajectory per PR.
+
+``--tune`` runs the measured-search autotuner (repro.tune) instead of
+the benches: a 4-device subprocess regenerates the committed tuning
+database at ``src/repro/tune/data/<backend>.json`` (``--tune-out``
+overrides the path). ``--tune --smoke`` shrinks the search grid and
+writes ``tuned-smoke.json`` instead — smoke data never silently
+replaces the committed database.
 """
 from __future__ import annotations
 
@@ -75,9 +82,35 @@ def main(argv=None) -> None:
                     help="tiny problem sizes (CI benchmark-smoke job)")
     ap.add_argument("--out", default=None, metavar="PATH",
                     help="write all rows as a JSON artifact")
+    ap.add_argument("--tune", action="store_true",
+                    help="run the autotuner (repro.tune) instead of the "
+                         "benches; writes the tuning database")
+    ap.add_argument("--tune-out", default=None, metavar="PATH",
+                    help="tuning-database path (default: the committed "
+                         "src/repro/tune/data/<backend>.json; with "
+                         "--smoke: ./tuned-smoke.json)")
     args = ap.parse_args(argv)
     if args.smoke:
         os.environ["REPRO_BENCH_SMOKE"] = "1"
+
+    if args.tune:
+        # own process: the tuner needs the forced 4-device mesh from the
+        # very first jax import, same as the distributed bench
+        env = dict(os.environ)
+        env.setdefault("PYTHONPATH", "src")
+        env.setdefault("XLA_FLAGS",
+                       "--xla_force_host_platform_device_count=4")
+        cmd = [sys.executable, "-m", "repro.tune"]
+        if args.smoke:
+            cmd.append("--smoke")
+        out = args.tune_out
+        if out is None and args.smoke:
+            # smoke grids are for validating the tuner wiring, not for
+            # producing winners — never clobber the committed database
+            out = "tuned-smoke.json"
+        if out:
+            cmd += ["--out", out]
+        raise SystemExit(subprocess.run(cmd, env=env).returncode)
 
     print("name,us_per_call,derived")
     from benchmarks import (bench_cholesky, bench_depth, bench_portability,

@@ -229,24 +229,40 @@ def _local_potrf_tree(a_local, *, axis: str, nshards: int,
     return jnp.where(keep, a_local, 0.0)
 
 
+def _autoresolve(cfg: PrecisionConfig, n: int, nshards: int):
+    """Resolve ``engine="auto"`` via the tuning DB (no-op otherwise)."""
+    if cfg.engine != "auto":
+        return cfg
+    from repro import tune  # local: tune is a consumer of this module
+    return tune.resolve_cfg(cfg, n, nshards)
+
+
 def dist_cholesky(a, mesh, cfg: PrecisionConfig | None = None,
                   axis: str = "model", *, broadcast_diag_only: bool = True,
-                  compress_comm: bool = True):
+                  compress_comm: bool | None = None):
     """Distributed lower Cholesky of a block-row-sharded SPD matrix.
 
     ``a``: global (n, n), n divisible by ``mesh.shape[axis] * cfg.leaf``.
     Returns L with the same sharding. ``cfg.engine`` selects the local
-    engine (``"blocked"`` — plan-driven, the default — or ``"tree"``,
-    the recursive oracle). ``compress_comm`` (default True) gathers the
-    solved panel in the precision the sharded plan assigns the
-    collective; ``False`` forces full-precision gathers (the baseline
-    ``benchmarks/bench_dist.py`` races).
+    engine (``"blocked"`` — plan-driven, the default — ``"tree"``, the
+    recursive oracle, or ``"auto"`` to consult the tuning database for
+    the measured winner at this ``(n, nshards)``; docs/TUNING.md).
+    ``compress_comm`` gathers the solved panel in the precision the
+    sharded plan assigns the collective; ``False`` forces full-precision
+    gathers (the baseline ``benchmarks/bench_dist.py`` races) and the
+    default ``None`` takes the tuning database's measured choice
+    (falling back to compressed).
     """
     cfg = cfg or PrecisionConfig()
     nshards = mesh.shape[axis]
     n = a.shape[-1]
     assert n % nshards == 0 and (n // nshards) % cfg.leaf == 0, (
         f"n={n} must be divisible by shards*leaf={nshards}*{cfg.leaf}")
+    cfg = _autoresolve(cfg, n, nshards)
+    if compress_comm is None:
+        from repro import tune
+        compress_comm = tune.decide(
+            n, tune.ladder_key(cfg), nshards).compress_comm
     local = (_local_potrf_tree if cfg.engine == "tree"
              else _local_potrf_blocked)
     fn = functools.partial(local, axis=axis, nshards=nshards, cfg=cfg,
@@ -322,9 +338,11 @@ def dist_cholesky_solve(a, b, mesh, cfg: PrecisionConfig | None = None,
                         axis: str = "model", *, l=None):
     """Solve A x = b with A (and b) block-row-sharded over ``axis``."""
     cfg = cfg or PrecisionConfig()
+    nshards = mesh.shape[axis]
+    cfg = _autoresolve(cfg, a.shape[-1] if a is not None else b.shape[0],
+                       nshards)
     if l is None:
         l = dist_cholesky(a, mesh, cfg, axis)
-    nshards = mesh.shape[axis]
     vec = b.ndim == 1
     if vec:
         b = b[:, None]

@@ -59,7 +59,9 @@ class PrecisionConfig:
     kernel_impl: str | None = None  # ops.py dispatch override
     #: execution engine: "blocked" = flat in-place tile schedule driven by
     #: the static precision plan (core/plan.py + core/blocked.py, the
-    #: default); "tree" = the paper's nested recursion (reference oracle).
+    #: default); "tree" = the paper's nested recursion (reference oracle);
+    #: "auto" = consult the tuning database (repro.tune, docs/TUNING.md)
+    #: at factor time for the measured winner at the problem size.
     engine: str = "blocked"
 
     def __post_init__(self):
@@ -67,7 +69,7 @@ class PrecisionConfig:
         for lv in self.levels:
             assert lv in DTYPES, lv
         assert self.leaf % 128 == 0 and self.leaf > 0, self.leaf
-        assert self.engine in ("tree", "blocked"), self.engine
+        assert self.engine in ("tree", "blocked", "auto"), self.engine
 
     # -- ladder ------------------------------------------------------------
     def name_at(self, level: int) -> str:

@@ -10,6 +10,10 @@ entry point here:
 * ``"tree"`` — the paper's nested recursion (:mod:`repro.core.tree`),
   kept as the reference oracle the equivalence suite checks the blocked
   engine against.
+* ``"auto"`` — resolved here, at factor time, against the tuning
+  database (:mod:`repro.tune`, docs/TUNING.md): the measured winner for
+  the problem size on this backend, falling back to ``"blocked"`` when
+  no database entry applies.
 """
 from __future__ import annotations
 
@@ -21,6 +25,14 @@ import jax.numpy as jnp
 from repro.core.blocked import blocked_potrf, blocked_trsm_left, diag_tri_inv
 from repro.core.precision import PrecisionConfig
 from repro.core.tree import (pad_factor, pad_spd, tree_potrf, tree_trsm_left)
+
+
+def _autoresolve(cfg: PrecisionConfig, n: int) -> PrecisionConfig:
+    """Resolve ``engine="auto"`` via the tuning DB (no-op otherwise)."""
+    if cfg.engine != "auto":
+        return cfg
+    from repro import tune  # local: tune is a consumer of this module
+    return tune.resolve_cfg(cfg, n)
 
 
 def _potrf(a_padded, cfg: PrecisionConfig):
@@ -51,7 +63,7 @@ def cholesky_padded(a, cfg: PrecisionConfig | None = None):
     ``cholesky_padded(a)[:n, :n] == cholesky(a)`` exactly."""
     cfg = cfg or PrecisionConfig()
     a_p, _ = pad_spd(jnp.asarray(a), cfg.leaf)
-    return _potrf(a_p, cfg)
+    return _potrf(a_p, _autoresolve(cfg, a_p.shape[-1]))
 
 
 def cholesky_solve(a, b, cfg: PrecisionConfig | None = None, *, l=None,
@@ -90,6 +102,7 @@ def cholesky_solve(a, b, cfg: PrecisionConfig | None = None, *, l=None,
         b = b[:, None]
     n = b.shape[0]
     npad = -(-n // cfg.leaf) * cfg.leaf
+    cfg = _autoresolve(cfg, npad)
     if l is None:
         lp = cholesky_padded(a, cfg)
     elif l.shape[-1] == npad:
@@ -127,6 +140,9 @@ def refine_solve(a, b, cfg: PrecisionConfig | None = None, *,
     and its diagonal-tile inverses across sweeps and requests.
     """
     from repro.core import refine as _refine  # circular-import guard
+    if cfg is not None and cfg.engine == "auto":
+        npad = -(-b.shape[0] // cfg.leaf) * cfg.leaf
+        cfg = _autoresolve(cfg, npad)
     return _refine.iterative_refine(a, b, cfg, refine, l=l,
                                     col_tol=col_tol, linvs=linvs)
 

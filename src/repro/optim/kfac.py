@@ -6,10 +6,12 @@ trainer: per-matrix second-moment factors
 
     A = EMA[ G G^T ] + damping * tr(A)/n * I        (block-diagonal)
 
-are factorized every ``factor_every`` steps with ``tree_potrf`` under the
-configured precision ladder, and every step the gradient direction is
-whitened by the cached factor via two ``tree_trsm_left`` solves
-(L L^T X = G). The magnitude is *grafted* from AdamW (distributed-Shampoo
+are factorized every ``factor_every`` steps under the configured
+precision ladder by the engine ``cfg.precision.engine`` selects —
+``blocked_potrf`` on the default flat schedule, ``tree_potrf`` as the
+reference path, or the tuning database's pick under ``"auto"`` — and
+every step the gradient direction is whitened by the cached factor via
+two ``tree_trsm_left`` solves (L L^T X = G). The magnitude is *grafted* from AdamW (distributed-Shampoo
 practice), so the solver provides the direction and Adam provides the
 scale — a one-sided, Cholesky-based relative of Shampoo/K-FAC that is
 stable at power -1.
@@ -31,6 +33,7 @@ import re
 import jax
 import jax.numpy as jnp
 
+from repro.core.blocked import blocked_potrf
 from repro.core.precision import PrecisionConfig
 from repro.core.refine import refine_steps, scaled_solve
 from repro.core.tree import tree_potrf, tree_trsm_left
@@ -111,10 +114,22 @@ def _damped(a, cfg: TreeNewtonConfig):
 
 
 def _refactor(a, cfg: TreeNewtonConfig):
-    """vmap tree-POTRF over (layers x blocks) of damped stats."""
+    """vmap the engine POTRF over (layers x blocks) of damped stats.
+
+    ``engine="auto"`` resolves against the tuning database at the block
+    size. Blocks that are not a multiple of the leaf (small ``block``
+    configs) stay on the tree engine, whose base case handles any
+    ``n <= leaf`` without padding.
+    """
     n = a.shape[-1]
+    pcfg = cfg.precision
+    if pcfg.engine == "auto":
+        from repro import tune  # local: avoid import cycle at module load
+        pcfg = tune.resolve_cfg(pcfg, n)
+    potrf = (blocked_potrf if pcfg.engine == "blocked"
+             and n % pcfg.leaf == 0 else tree_potrf)
     flat = _damped(a, cfg).reshape(-1, n, n)
-    chol = jax.vmap(lambda m: tree_potrf(m, cfg.precision))(flat)
+    chol = jax.vmap(lambda m: potrf(m, pcfg))(flat)
     return chol.reshape(a.shape)
 
 

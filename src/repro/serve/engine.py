@@ -168,8 +168,9 @@ class SolverEngine:
     def __init__(self, ladder: str | PrecisionConfig = "bf16_f32", *,
                  max_sweeps: int = 10, gmres_restart: int = 16,
                  max_cached_factors: int = 16, mesh=None,
-                 dist_threshold: int = 2048, dist_axis: str = "model",
-                 dist_compress: bool = True):
+                 dist_threshold: int | None = None,
+                 dist_axis: str = "model",
+                 dist_compress: bool | None = None, tuning_db=None):
         if isinstance(ladder, str):
             self.ladder_name = ladder
             self.cfg = PAPER_CONFIGS[ladder]
@@ -181,9 +182,14 @@ class SolverEngine:
         assert max_cached_factors >= 1, max_cached_factors
         self.max_cached_factors = max_cached_factors
         self.mesh = mesh
+        #: None = consult the tuning DB per problem size (docs/TUNING.md),
+        #: falling back to the pre-tuner 2048; an int pins the threshold
         self.dist_threshold = dist_threshold
         self.dist_axis = dist_axis
+        #: None = the tuning DB's measured per-size choice; a bool pins it
         self.dist_compress = dist_compress
+        #: injected TuningDB (tests); None = the committed per-backend DB
+        self._tuning_db = tuning_db
         if mesh is not None:
             assert dist_axis in mesh.shape, (dist_axis, mesh)
         #: cache_key -> (fingerprint, padded factor, diag-tile inverses),
@@ -194,17 +200,43 @@ class SolverEngine:
         self._factors: collections.OrderedDict = collections.OrderedDict()
         self._cache_lock = threading.RLock()
 
+    def _tuned(self, n: int, nshards: int):
+        """Tuning-DB decision for ``(n, ladder, nshards)`` (repro.tune)."""
+        from repro import tune
+        return tune.decide(n, tune.ladder_key(self.cfg), nshards,
+                           db=self._tuning_db)
+
     def _use_dist(self, n: int) -> bool:
         """True when a size-``n`` solve takes the distributed path.
 
         Deterministic in ``n`` so :meth:`_factorize` and
         :meth:`solve_batched` always agree on what a cached factor is.
+        With ``dist_threshold=None`` the threshold is the tuning
+        database's measured value for this size (default 2048).
         """
         if self.mesh is None:
             return False
         nshards = self.mesh.shape[self.dist_axis]
-        return (n >= self.dist_threshold
-                and n % (nshards * self.cfg.leaf) == 0)
+        if n % (nshards * self.cfg.leaf) != 0:
+            return False
+        thr = self.dist_threshold
+        if thr is None:
+            thr = self._tuned(n, nshards).dist_threshold
+        return n >= thr
+
+    def _cfg_for(self, n: int) -> PrecisionConfig:
+        """Per-size engine resolution for ``engine="auto"`` configs.
+
+        Factorization and every later solve against the cached factor
+        route through this, so both always agree on the engine (and thus
+        on whether ``linvs`` exist for the factor).
+        """
+        if self.cfg.engine != "auto":
+            return self.cfg
+        nshards = (self.mesh.shape[self.dist_axis]
+                   if self._use_dist(n) else 1)
+        return dataclasses.replace(self.cfg,
+                                   engine=self._tuned(n, nshards).engine)
 
     def _clamp(self, target_digits: float) -> float:
         rname = "f64" if jax.config.jax_enable_x64 else "f32"
@@ -224,16 +256,22 @@ class SolverEngine:
         solve inverts its diagonal blocks per shard).
         """
         a = jnp.asarray(a)
-        if self._use_dist(a.shape[-1]):
+        n = a.shape[-1]
+        cfg = self._cfg_for(n)
+        if self._use_dist(n):
+            compress = self.dist_compress
+            if compress is None:
+                compress = self._tuned(
+                    n, self.mesh.shape[self.dist_axis]).compress_comm
             a_sh = jax.device_put(a, NamedSharding(
                 self.mesh, PartitionSpec(self.dist_axis, None)))
-            l = dist_cholesky(a_sh, self.mesh, self.cfg,
+            l = dist_cholesky(a_sh, self.mesh, cfg,
                               axis=self.dist_axis,
-                              compress_comm=self.dist_compress)
+                              compress_comm=compress)
             return l, None
-        l = cholesky_padded(a, self.cfg)
-        linvs = (diag_tri_inv(l, self.cfg)
-                 if self.cfg.engine == "blocked" else None)
+        l = cholesky_padded(a, cfg)
+        linvs = (diag_tri_inv(l, cfg)
+                 if cfg.engine == "blocked" else None)
         return l, linvs
 
     def _dist_refine(self, a, bmat, rcfg: RefineConfig, l,
@@ -248,7 +286,8 @@ class SolverEngine:
         fused-residual dispatch like the local path.
         """
         rdtype = rcfg.rdtype()
-        mesh, axis, cfg = self.mesh, self.dist_axis, self.cfg
+        mesh, axis = self.mesh, self.dist_axis
+        cfg = self._cfg_for(a.shape[-1])
         # keep A block-row-sharded for the sweep GEMMs too: the per-sweep
         # matvec/residual is the dominant O(n^2 k) term, and a replicated
         # A would run it on one device
@@ -361,7 +400,7 @@ class SolverEngine:
             res: RefineResult = self._dist_refine(
                 a, bmat, rcfg, l, jnp.asarray(col_tol))
         else:
-            res = refine_solve(a, bmat, self.cfg, refine=rcfg,
+            res = refine_solve(a, bmat, self._cfg_for(n), refine=rcfg,
                                l=l, col_tol=jnp.asarray(col_tol),
                                linvs=linvs)
         sweeps = np.atleast_1d(np.asarray(res.iterations))

@@ -101,10 +101,18 @@ class BatchScheduler:
     """
 
     def __init__(self, engine: SolverEngine | None = None, *,
-                 max_batch: int = 32, max_wait_ms: float | None = None,
+                 max_batch: int | None = None,
+                 max_wait_ms: float | None = None,
                  max_pending_factors: int | None = None):
-        assert max_batch >= 1, max_batch
         self.engine = engine if engine is not None else SolverEngine()
+        if max_batch is None:
+            # tuning-DB serving geometry for this ladder/backend
+            # (docs/TUNING.md), falling back to the pre-tuner 32
+            from repro import tune
+            max_batch = tune.decide(
+                256, tune.ladder_key(self.engine.cfg),
+                db=self.engine._tuning_db).max_batch
+        assert max_batch >= 1, max_batch
         self.max_batch = max_batch
         #: async batching window; None = sync-only scheduler
         self.max_wait_ms = max_wait_ms

@@ -1,0 +1,49 @@
+"""Measured-search autotuner + tuning database for the plan/engine knobs.
+
+(docs/TUNING.md is the user-facing guide.)
+
+Performance of the solver stack hinges on knobs that are size- and
+backend-dependent: execution engine (the distributed benchmark measured
+the blocked local engine LOSING to the tree at n=1024 and winning at
+n=2048), leaf size, collective compression, the serving batch geometry.
+This package replaces the hand-picked constants with measurement:
+
+* :func:`autotune` (``python -m repro.tune``, or ``benchmarks/run.py
+  --tune``) profiles candidate configurations and persists winners —
+  including interpolated engine-crossover sizes — to a JSON database
+  keyed by ``(backend, n, ladder, nshards)``.
+* :func:`decide` resolves a key against the committed per-backend
+  database (``repro/tune/data/<backend>.json``, override with
+  ``REPRO_TUNING_DB``) with a deterministic nearest-key fallback chain
+  ending at today's defaults.
+* :func:`resolve_cfg` is the factor-time hook: a
+  :class:`~repro.core.precision.PrecisionConfig` with ``engine="auto"``
+  is resolved to the measured winner for its problem size before any
+  schedule is built. ``dist_cholesky(compress_comm=None)`` and
+  ``SolverEngine(dist_threshold=None)`` consult the same database.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.tune.db import (DEFAULTS, TunedDecision, TuningDB,  # noqa: F401
+                           clear_cache, decide, default_db_path,
+                           get_default_db, ladder_key, load_db,
+                           validate_db, verify_consultation)
+from repro.tune.search import autotune, interp_crossover  # noqa: F401
+
+
+def resolve_cfg(cfg, n: int, nshards: int = 1, *, db=None):
+    """Resolve ``engine="auto"`` to the tuned engine for size ``n``.
+
+    Any other engine value passes through untouched, so explicit
+    ``engine="tree"``/``"blocked"`` configs keep meaning what they say.
+    The leaf is never changed here — plan geometry is the caller's
+    contract (factor caches and solves must agree on it); callers that
+    want the tuned leaf read ``decide(...).leaf`` before building their
+    config.
+    """
+    if cfg.engine != "auto":
+        return cfg
+    dec = decide(n, ladder_key(cfg), nshards, db=db)
+    return dataclasses.replace(cfg, engine=dec.engine)

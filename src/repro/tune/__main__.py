@@ -1,0 +1,71 @@
+"""CLI for the autotuner: regenerate or verify a tuning database.
+
+Regenerate the committed CPU database (what ``benchmarks/run.py --tune``
+runs, with the forced 4-device mesh set up for you):
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python -m repro.tune --out src/repro/tune/data/cpu.json
+
+CI's autotune-smoke job runs ``--smoke`` (tiny sizes) and then
+``--verify`` on the emitted file, which checks the schema and that
+lookups actually follow the measured engine crossover (tree below,
+blocked above). Exit status is non-zero on any violation.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.tune",
+                                 description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny candidate sizes (CI autotune-smoke job)")
+    ap.add_argument("--out", default=None, metavar="PATH",
+                    help="database path to write (default: the packaged "
+                         "per-backend file under repro/tune/data/)")
+    ap.add_argument("--backend", default=None,
+                    help="backend key (default: jax.default_backend())")
+    ap.add_argument("--ladders", default="bf16_f32",
+                    help="comma-separated ladder keys to tune")
+    ap.add_argument("--verify", default=None, metavar="PATH",
+                    help="validate an existing database and check the "
+                         "lookup follows its crossovers; no tuning run")
+    args = ap.parse_args(argv)
+
+    from repro.tune import db as tdb
+
+    if args.verify:
+        loaded = tdb.load_db(args.verify)
+        if loaded is None:
+            print(f"FAIL: could not load tuning DB at {args.verify}")
+            return 1
+        errs = tdb.verify_consultation(loaded)
+        for e in errs:
+            print(f"FAIL: {e}")
+        print(f"verify {args.verify}: "
+              f"{'FAIL' if errs else 'OK'} ({len(loaded.entries)} entries, "
+              f"{len(loaded.crossovers)} crossovers)")
+        return 1 if errs else 0
+
+    from repro.tune.search import autotune
+    print("name,us_per_call,derived")
+    payload = autotune(args.backend, smoke=args.smoke,
+                       ladders=tuple(args.ladders.split(",")))
+    out = args.out or os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                   "data", f"{payload['backend']}.json")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w", encoding="utf-8") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {len(payload['entries'])} entries / "
+          f"{len(payload['crossovers'])} crossovers to {out}",
+          file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

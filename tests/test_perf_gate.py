@@ -1,0 +1,150 @@
+"""Unit tests for the unified CI perf gates (tools/perf_gate.py).
+
+The gate module lives outside the package tree (tools/), so it is
+loaded by file path. Each gate gets a passing payload and the specific
+regressions it exists to catch.
+"""
+from __future__ import annotations
+
+import importlib.util
+import json
+import os
+
+_TOOLS = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "tools")
+_spec = importlib.util.spec_from_file_location(
+    "perf_gate", os.path.join(_TOOLS, "perf_gate.py"))
+perf_gate = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(perf_gate)
+
+
+def chol_row(n, speedup=1.4, eb=24, et=41):
+    return {"n": n, "ladder": "bf16_f32", "leaf": 256,
+            "us_tree": 1000.0, "us_blocked": 1000.0 / speedup,
+            "eqns_tree": et, "eqns_blocked": eb,
+            "speedup_blocked_vs_tree": speedup}
+
+
+def dist_row(n, *, compressed=1.1, rel=1e-5, engine=None, source="exact",
+             xover=1800, tuned_speedup=None, auto_ok=True):
+    engine = engine or ("tree" if n < xover else "blocked")
+    if tuned_speedup is None:
+        tuned_speedup = 1.0 if engine == "tree" else 1.05
+    return {"n": n, "ladder": "bf16_f32", "leaf": 128, "nshards": 4,
+            "us_local_tree": 1000.0, "us_local_blocked": 950.0,
+            "us_local_tuned": 1000.0 / tuned_speedup,
+            "us_comm_f32_gather": 1100.0,
+            "us_comm_compressed": 1100.0 / compressed,
+            "speedup_blocked_vs_tree": 1.05,
+            "speedup_tuned_vs_tree": tuned_speedup,
+            "speedup_compressed_vs_f32": compressed,
+            "rel_vs_single_device": rel,
+            "tuned_engine": engine, "tuned_source": source,
+            "tuned_crossover_n": xover, "auto_matches_tuned": auto_ok}
+
+
+# ---------------------------------------------------------------------------
+# cholesky gate
+# ---------------------------------------------------------------------------
+def test_cholesky_gate_passes_and_catches():
+    ok = {"bench": "cholesky_engines",
+          "rows": [chol_row(512), chol_row(2048)]}
+    assert perf_gate.gate_cholesky(ok) == []
+    assert perf_gate.gate_cholesky({"rows": []}) != []
+    slow = {"rows": [chol_row(2048, speedup=0.9)]}
+    assert any("slower than tree" in e
+               for e in perf_gate.gate_cholesky(slow))
+    # a small-n loss is tolerated (that is what the tuner is for)
+    assert perf_gate.gate_cholesky({"rows": [chol_row(512, 0.9)]}) == []
+    eqns = {"rows": [chol_row(512, eb=50, et=41)]}
+    assert any("dispatch count" in e for e in perf_gate.gate_cholesky(eqns))
+
+
+# ---------------------------------------------------------------------------
+# dist gate
+# ---------------------------------------------------------------------------
+def test_dist_gate_passes_and_catches():
+    ok = {"bench": "dist_cholesky", "nshards": 4,
+          "rows": [dist_row(1024), dist_row(2048)]}
+    assert perf_gate.gate_dist(ok) == []
+    empty = {"rows": [], "skipped": "needs_4_devices"}
+    assert any("skipped" in e for e in perf_gate.gate_dist(empty))
+    slow = {"rows": [dist_row(2048, compressed=0.8)]}
+    assert any("compressed" in e for e in perf_gate.gate_dist(slow))
+    drift = {"rows": [dist_row(1024, rel=0.2)]}
+    assert any("single-device" in e for e in perf_gate.gate_dist(drift))
+
+
+def test_dist_gate_tuned_selection():
+    # selection must come from the database, not the default fallback
+    fell_back = {"rows": [dist_row(1024, source="default")]}
+    assert any("defaults" in e for e in perf_gate.gate_dist(fell_back))
+    # rows written before the tuner integration fail loudly
+    legacy = {"rows": [{k: v for k, v in dist_row(1024).items()
+                        if not k.startswith("tuned")
+                        and k != "auto_matches_tuned"
+                        and k != "us_local_tuned"
+                        and k != "speedup_tuned_vs_tree"}]}
+    assert any("tuned_engine" in e for e in perf_gate.gate_dist(legacy))
+    # engine must match its side of the measured crossover
+    wrong_side = {"rows": [dist_row(1024, engine="blocked")]}
+    assert any("expected tree" in e
+               for e in perf_gate.gate_dist(wrong_side))
+    wrong_above = {"rows": [dist_row(2048, engine="tree",
+                                     tuned_speedup=1.0)]}
+    assert any("expected blocked" in e
+               for e in perf_gate.gate_dist(wrong_above))
+    # null crossover = tree everywhere
+    assert perf_gate.gate_dist(
+        {"rows": [dist_row(4096, engine="tree", xover=None)]}) == []
+    # the tuned engine has to actually win (tree side: >= 1.0 exactly)
+    losing = {"rows": [dist_row(1024, tuned_speedup=0.97)]}
+    assert any("tuned engine loses" in e for e in perf_gate.gate_dist(losing))
+    below_floor = {"rows": [dist_row(2048, tuned_speedup=0.9)]}
+    assert any("tuned engine loses" in e
+               for e in perf_gate.gate_dist(below_floor))
+    # auto must trace to the tuned engine's computation
+    diverged = {"rows": [dist_row(1024, auto_ok=False)]}
+    assert any("auto" in e for e in perf_gate.gate_dist(diverged))
+
+
+# ---------------------------------------------------------------------------
+# schema gate
+# ---------------------------------------------------------------------------
+def test_schema_gate():
+    ok = {"bench": "dist_cholesky", "nshards": 4, "rows": [dist_row(1024)]}
+    assert perf_gate.check_schema(ok, "BENCH_dist.json") == []
+    missing = {"rows": [dist_row(1024)]}
+    assert any("nshards" in e
+               for e in perf_gate.check_schema(missing, "BENCH_dist.json"))
+    assert any("rows empty" in e for e in perf_gate.check_schema(
+        {"bench": "x", "rows": []}, "BENCH_other.json"))
+    nan = {"bench": "x", "rows": [{"n": 512, "us_t": float("nan")}]}
+    assert any("not finite" in e
+               for e in perf_gate.check_schema(nan, "BENCH_other.json"))
+    zero = {"bench": "x", "rows": [{"n": 512, "us_t": 0.0}]}
+    assert any("not finite" in e
+               for e in perf_gate.check_schema(zero, "BENCH_other.json"))
+    malformed = {"bench": "x", "rows": [{"us_t": 1.0}]}
+    assert any("malformed" in e
+               for e in perf_gate.check_schema(malformed, "BENCH_o.json"))
+
+
+def test_gates_pass_on_committed_artifacts():
+    """The repo-root BENCH_*.json artifacts must satisfy their own gates
+    (CI regenerates them, but the committed state stays coherent)."""
+    root = os.path.dirname(_TOOLS)
+    chol = json.load(open(os.path.join(root, "BENCH_cholesky.json")))
+    dist = json.load(open(os.path.join(root, "BENCH_dist.json")))
+    assert perf_gate.gate_cholesky(chol) == []
+    assert perf_gate.gate_dist(dist) == []
+    assert perf_gate.check_schema(chol, "BENCH_cholesky.json") == []
+    assert perf_gate.check_schema(dist, "BENCH_dist.json") == []
+
+
+def test_db_gate_on_committed_database():
+    root = os.path.dirname(_TOOLS)
+    path = os.path.join(root, "src", "repro", "tune", "data", "cpu.json")
+    payload = json.load(open(path))
+    assert perf_gate.gate_db(payload) == []
+    assert perf_gate.gate_db({"version": 1}) != []

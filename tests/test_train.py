@@ -151,3 +151,45 @@ def test_ef_compression_dp_trainer():
         w, res = fn(w, res, X, Y, lr)   # 600 steps is ~9e-3, margin 5x
     err = float(jnp.abs(w - w_true).max())
     assert err < 5e-2, err
+
+
+def test_kfac_refactor_engines_agree():
+    """Satellite of the tuner PR: the K-FAC factor stack now vmaps the
+    blocked engine by default — its factors must match the tree path on
+    the same damped stats (shared bf16 ladder, so agreement is tight),
+    and engine="auto" must produce one of the two."""
+    import dataclasses
+
+    from repro.optim import kfac
+
+    cfg = kfac.TreeNewtonConfig()           # block=512, bf16_f32, leaf 128
+    rng = np.random.default_rng(0)
+    n = cfg.block
+    m = rng.uniform(-1, 1, (3, n, n))
+    a = (m + m.transpose(0, 2, 1)) / 2
+    idx = np.diag_indices(n)
+    a[:, idx[0], idx[1]] += n
+    a = jnp.asarray(a, jnp.float32)
+
+    def with_engine(eng):
+        p = dataclasses.replace(cfg.precision, engine=eng)
+        return np.asarray(kfac._refactor(a, dataclasses.replace(
+            cfg, precision=p)), np.float64)
+
+    l_blocked = with_engine("blocked")
+    l_tree = with_engine("tree")
+    scale = np.abs(l_tree).max()
+    assert np.abs(l_blocked - l_tree).max() / scale < 1e-4
+    l_auto = with_engine("auto")
+    assert (np.array_equal(l_auto, l_blocked)
+            or np.array_equal(l_auto, l_tree))
+    # both reconstruct the damped stats to bf16-ladder accuracy
+    damped = np.asarray(kfac._damped(a, cfg), np.float64)
+    rec = np.einsum("bij,bkj->bik", l_blocked, l_blocked)
+    assert np.abs(rec - damped).max() / np.abs(damped).max() < 4e-2
+
+    # blocks smaller than the leaf stay on the tree base case
+    small_cfg = dataclasses.replace(cfg, block=64)
+    l_small = np.asarray(kfac._refactor(jnp.asarray(a[:, :64, :64]),
+                                        small_cfg), np.float64)
+    assert np.isfinite(l_small).all()

@@ -1,0 +1,318 @@
+"""Tuning-database behavior suite (repro.tune, docs/TUNING.md).
+
+Covers the lookup relaxation chain (exact -> crossover -> nearest ->
+defaults), the corrupt/missing-database fallbacks, the SolverEngine /
+scheduler consultation points, and the autotuner's determinism under an
+injected timer. Everything runs on whatever devices the session has —
+the distributed knobs are exercised through a 1-wide mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import warnings
+
+import numpy as np
+import pytest
+
+from repro import tune
+from repro.core.precision import PrecisionConfig
+from repro.tune.db import DEFAULTS, TunedDecision, TuningDB
+from repro.tune.search import interp_crossover
+
+
+# ---------------------------------------------------------------------------
+# payload builders
+# ---------------------------------------------------------------------------
+def entry(n, ladder="bf16_f32", nshards=1, **choice):
+    choice.setdefault("engine", "tree")
+    return {"backend": "cpu", "n": n, "ladder": ladder, "nshards": nshards,
+            "choice": choice, "measurements": {"us_probe": 1.0}}
+
+
+def payload(entries, crossovers=()):
+    return {"version": 1, "backend": "cpu", "smoke": True,
+            "sizes": [e["n"] for e in entries],
+            "nshards_dist": None, "entries": entries,
+            "crossovers": list(crossovers)}
+
+
+def xover(n, ladder="bf16_f32", nshards=1):
+    return {"backend": "cpu", "ladder": ladder, "nshards": nshards,
+            "knob": "engine", "below": "tree", "above": "blocked", "n": n}
+
+
+# ---------------------------------------------------------------------------
+# lookup relaxation chain
+# ---------------------------------------------------------------------------
+def test_exact_hit_wins():
+    db = TuningDB(payload(
+        [entry(512, engine="tree", leaf=128, max_batch=8),
+         entry(2048, engine="blocked", leaf=256)],
+        [xover(1200)]))
+    d = db.decide(512, "bf16_f32", 1)
+    assert (d.source, d.engine, d.leaf, d.max_batch) == \
+        ("exact", "tree", 128, 8)
+    assert d.matched_n == 512
+    # un-set knobs in the choice come from DEFAULTS
+    assert d.dist_threshold == DEFAULTS["dist_threshold"]
+
+
+def test_crossover_resolves_unmeasured_sizes():
+    db = TuningDB(payload(
+        [entry(512, engine="tree", leaf=128),
+         entry(2048, engine="blocked", leaf=256)],
+        [xover(1200)]))
+    below = db.decide(1024, "bf16_f32", 1)
+    above = db.decide(1536, "bf16_f32", 1)
+    assert below.source == above.source == "crossover"
+    assert below.engine == "tree"
+    assert above.engine == "blocked"
+    # non-engine knobs come from the nearest-n entry (log-space)
+    assert below.matched_n == 512 and below.leaf == 128
+    assert above.matched_n == 2048 and above.leaf == 256
+
+
+def test_null_crossover_means_tree_everywhere():
+    db = TuningDB(payload([entry(512, engine="tree")], [xover(None)]))
+    assert db.decide(1 << 20, "bf16_f32", 1).engine == "tree"
+
+
+def test_nearest_key_fallbacks():
+    db = TuningDB(payload(
+        [entry(512, ladder="bf16_f32", engine="tree", max_batch=16)]))
+    # same ladder, no crossover record -> nearest-n entry
+    d = db.decide(4096, "bf16_f32", 1)
+    assert (d.source, d.engine, d.max_batch) == ("nearest", "tree", 16)
+    # unknown ladder -> nearest entry for the same nshards, any ladder
+    d = db.decide(512, "f16_f32", 1)
+    assert (d.source, d.max_batch) == ("nearest", 16)
+    # unknown nshards -> defaults
+    d = db.decide(512, "bf16_f32", 8)
+    assert d.source == "default"
+    assert d == TunedDecision.defaults()
+
+
+def test_module_decide_with_injected_db():
+    db = TuningDB(payload([entry(256, engine="blocked", leaf=256)]))
+    assert tune.decide(256, "bf16_f32", db=db).engine == "blocked"
+
+
+# ---------------------------------------------------------------------------
+# corrupt / missing databases
+# ---------------------------------------------------------------------------
+def test_corrupt_db_warns_and_defaults(tmp_path, monkeypatch):
+    bad = tmp_path / "bad.json"
+    bad.write_text("{not json", encoding="utf-8")
+    monkeypatch.setenv(tune.db.ENV_DB, str(bad))
+    tune.clear_cache()
+    try:
+        with pytest.warns(UserWarning, match="corrupt tuning DB"):
+            d = tune.decide(1024, "bf16_f32", backend="cpu")
+        assert d == TunedDecision.defaults()
+    finally:
+        tune.clear_cache()
+
+
+def test_invalid_schema_warns_and_defaults(tmp_path, monkeypatch):
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({"version": 1}), encoding="utf-8")
+    monkeypatch.setenv(tune.db.ENV_DB, str(bad))
+    tune.clear_cache()
+    try:
+        with pytest.warns(UserWarning, match="corrupt tuning DB"):
+            d = tune.decide(1024, "bf16_f32", backend="cpu")
+        assert d == TunedDecision.defaults()
+    finally:
+        tune.clear_cache()
+
+
+def test_missing_explicit_db_warns_and_defaults(tmp_path, monkeypatch):
+    monkeypatch.setenv(tune.db.ENV_DB, str(tmp_path / "nope.json"))
+    tune.clear_cache()
+    try:
+        with pytest.warns(UserWarning, match="not found"):
+            d = tune.decide(1024, "bf16_f32", backend="cpu")
+        assert d == TunedDecision.defaults()
+    finally:
+        tune.clear_cache()
+
+
+def test_missing_packaged_db_is_silent():
+    # a backend with no committed database is the normal untuned state
+    tune.clear_cache()
+    try:
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            d = tune.decide(1024, "bf16_f32", backend="no_such_backend")
+        assert d.source == "default"
+    finally:
+        tune.clear_cache()
+
+
+def test_validate_db_catches_breakage():
+    good = payload([entry(512)], [xover(1200)])
+    assert tune.validate_db(good) == []
+    assert tune.validate_db([]) != []
+    assert tune.validate_db({}) != []
+    no_engine = payload([{**entry(512), "choice": {"leaf": 128}}])
+    assert any("choice.engine" in e for e in tune.validate_db(no_engine))
+    bad_t = payload([entry(512)])
+    bad_t["entries"][0]["measurements"] = {"us_probe": float("nan")}
+    assert any("finite" in e for e in tune.validate_db(bad_t))
+    bad_x = payload([entry(512)], [{**xover(1200), "n": -3}])
+    assert any("crossovers[0]" in e for e in tune.validate_db(bad_x))
+    with pytest.raises(ValueError):
+        TuningDB({})
+
+
+def test_verify_consultation_flags_mismatch():
+    ok = TuningDB(payload(
+        [entry(512, engine="tree"), entry(2048, engine="blocked")],
+        [xover(1200)]))
+    assert tune.verify_consultation(ok) == []
+    # a database whose entries contradict its crossover fails
+    lying = TuningDB(payload(
+        [entry(512, engine="blocked"), entry(2048, engine="blocked")],
+        [xover(None)]))
+    assert tune.verify_consultation(lying) != []
+
+
+# ---------------------------------------------------------------------------
+# consumers: resolve_cfg, SolverEngine, BatchScheduler
+# ---------------------------------------------------------------------------
+def test_resolve_cfg_only_touches_auto():
+    db = TuningDB(payload([entry(512, engine="tree", leaf=128)]))
+    explicit = PrecisionConfig(levels=("bf16", "f32"), engine="blocked")
+    assert tune.resolve_cfg(explicit, 512, db=db) is explicit
+    auto = dataclasses.replace(explicit, engine="auto")
+    got = tune.resolve_cfg(auto, 512, db=db)
+    assert got.engine == "tree"
+    assert got.leaf == auto.leaf      # plan geometry never changes
+
+
+def test_auto_engine_solves_correctly():
+    from repro.core.solve import cholesky_solve
+    rng = np.random.default_rng(0)
+    n = 192                           # non-multiple-of-leaf on purpose
+    m = rng.uniform(-1, 1, (n, n))
+    a = ((m + m.T) / 2 + n * np.eye(n)).astype(np.float32)
+    b = rng.standard_normal(n).astype(np.float32)
+    cfg = PrecisionConfig(levels=("bf16", "f32"), leaf=128, engine="auto")
+    x = np.asarray(cholesky_solve(a, b, cfg))
+    rel = np.linalg.norm(a @ x - b) / np.linalg.norm(b)
+    assert rel < 5e-2                 # bf16 factor, no refinement
+
+
+def test_solver_engine_routes_on_tuned_dist_threshold():
+    from repro.launch.mesh import make_mesh
+    from repro.serve.engine import SolverEngine
+    mesh = make_mesh((1,), ("model",))
+    rng = np.random.default_rng(1)
+    n = 256
+    m = rng.uniform(-1, 1, (n, n))
+    a = ((m + m.T) / 2 + n * np.eye(n)).astype(np.float32)
+    b = rng.standard_normal(n).astype(np.float32)
+    lo = TuningDB(payload([entry(n, dist_threshold=256)]))
+    hi = TuningDB(payload([entry(n, dist_threshold=1024)]))
+    for db, want in ((lo, True), (hi, False)):
+        eng = SolverEngine(PrecisionConfig(levels=("bf16", "f32"),
+                                           leaf=128),
+                           mesh=mesh, tuning_db=db)
+        assert eng.dist_threshold is None     # = consult the database
+        x, info = eng.solve(a, b, target_digits=5)
+        assert info.distributed is want, (want, info)
+        rel = np.linalg.norm(a @ np.asarray(x) - b) / np.linalg.norm(b)
+        assert rel < 1e-4
+    # an explicit constructor threshold pins the routing, DB ignored
+    eng = SolverEngine(PrecisionConfig(levels=("bf16", "f32"), leaf=128),
+                       mesh=mesh, dist_threshold=10 ** 9, tuning_db=lo)
+    _, info = eng.solve(a, b, target_digits=5)
+    assert info.distributed is False
+
+
+def test_scheduler_max_batch_consults_db():
+    from repro.serve.engine import SolverEngine
+    from repro.serve.scheduler import BatchScheduler
+    db = TuningDB(payload([entry(256, max_batch=8)]))
+    eng = SolverEngine(PrecisionConfig(levels=("bf16", "f32"), leaf=128),
+                       tuning_db=db)
+    assert BatchScheduler(eng).max_batch == 8
+    assert BatchScheduler(eng, max_batch=4).max_batch == 4  # explicit wins
+    # no engine / no database entry -> the pre-tuner default geometry
+    assert BatchScheduler(
+        SolverEngine(tuning_db=TuningDB(payload([entry(99999)])))
+    ).max_batch == DEFAULTS["max_batch"]
+
+
+# ---------------------------------------------------------------------------
+# the search itself
+# ---------------------------------------------------------------------------
+def test_interp_crossover():
+    # blocked must clear the REL_TOL noise margin to win a grid point
+    assert interp_crossover([512, 1024], [100, 100], [90, 90]) == 512
+    assert interp_crossover([512, 1024], [100, 100], [101, 99.9]) is None
+    mid = interp_crossover([1024, 2048], [100.0, 120.0], [110.0, 80.0])
+    assert 1024 < mid <= 2048
+    # a sub-noise "win" at the flip point does not move the crossover
+    tie = interp_crossover([1024, 2048], [100.0, 120.0], [99.9, 80.0])
+    assert 1024 < tie <= 2048
+    # non-monotone grid: an isolated blocked win at the smallest size is
+    # noise when the tree owns every larger size — tree everywhere
+    assert interp_crossover([512, 1024, 2048], [100.0, 100.0, 100.0],
+                            [90.0, 105.0, 105.0]) is None
+
+
+def test_refit_engines_follows_crossover():
+    from repro.tune.search import _refit_engines
+    entries = [
+        {"ladder": "bf16_f32", "nshards": 1, "n": 512,
+         "choice": {"engine": "blocked", "leaf": 128},
+         "measurements": {"us_tree_leaf128": 100.0, "us_tree_leaf256": 95.0,
+                          "us_blocked_leaf128": 90.0,
+                          "us_blocked_leaf256": 96.0}},
+        {"ladder": "bf16_f32", "nshards": 1, "n": 2048,
+         "choice": {"engine": "tree", "leaf": 256},
+         "measurements": {"us_tree_leaf256": 100.0,
+                          "us_blocked_leaf256": 90.0}},
+        {"ladder": "bf16_f32", "nshards": 4, "n": 512,
+         "choice": {"engine": "blocked", "leaf": 128},
+         "measurements": {"us_local_tree": 100.0,
+                          "us_local_blocked": 90.0}},
+    ]
+    # fitted crossover says tree below 1024: the noisy 512 blocked vote is
+    # overridden (and the leaf re-picked for the tree race), the 2048
+    # entry flips to blocked, the other-nshards entry is untouched
+    _refit_engines(entries, "bf16_f32", 1, 1024)
+    assert entries[0]["choice"] == {"engine": "tree", "leaf": 256}
+    assert entries[1]["choice"] == {"engine": "blocked", "leaf": 256}
+    assert entries[2]["choice"]["engine"] == "blocked"
+    # xn=None means the tree owns the whole grid
+    _refit_engines(entries, "bf16_f32", 4, None)
+    assert entries[2]["choice"]["engine"] == "tree"
+
+
+def test_autotune_deterministic_and_valid():
+    calls = [0]
+
+    def fake_timer(fn, *args):
+        calls[0] += 1
+        return 1000.0 + 7.0 * calls[0]    # fixed, order-dependent
+
+    def quiet(name, us, derived):
+        pass
+
+    def run():
+        calls[0] = 0
+        return tune.autotune("cpu", smoke=True, timer=fake_timer,
+                             log=quiet, nshards=0, serving=True)
+
+    p1, p2 = run(), run()
+    assert json.dumps(p1, sort_keys=True) == json.dumps(p2, sort_keys=True)
+    assert tune.validate_db(p1) == []
+    db = TuningDB(p1)
+    # strictly increasing fake times -> earlier candidates win -> the
+    # noise-margined pick is the tree engine at every smoke size
+    for e in p1["entries"]:
+        assert e["choice"]["engine"] == "tree"
+    assert tune.verify_consultation(db) == []

@@ -1,0 +1,197 @@
+#!/usr/bin/env python3
+"""Unified CI perf gates over the benchmark JSON artifacts (stdlib-only).
+
+Replaces the inline heredoc gates that used to live in
+.github/workflows/ci.yml with one importable, unit-tested module
+(tests/test_perf_gate.py). Subcommands:
+
+  cholesky   BENCH_cholesky.json — the flat blocked engine exists to
+             beat the recursion: slower than the tree at n >= 2048, or
+             no dispatch-count reduction, is a regression.
+  dist       BENCH_dist.json — plan-compressed gathers must not lose to
+             f32 gathers at n >= 2048 (5% timer-noise allowance), the
+             distributed factor must agree with the single-device
+             engine, and the tuned engine selection (repro.tune) must
+             come from the committed database and win its side of the
+             measured crossover.
+  schema     any BENCH_*.json — required keys, non-empty rows, finite
+             positive timings. Run over every artifact so a bench that
+             silently wrote garbage fails loudly.
+  db         a tuning-database JSON — schema validation via
+             repro.tune.db.validate_db (the one non-stdlib import,
+             itself dependency-free).
+
+Every gate is a function returning a list of error strings (empty =
+pass); the CLI prints them and exits non-zero if any gate failed.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import math
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: minimum top-level keys per BENCH artifact (schema gate)
+REQUIRED_KEYS = {
+    "BENCH_cholesky.json": ("bench", "rows"),
+    "BENCH_dist.json": ("bench", "nshards", "rows"),
+}
+DEFAULT_KEYS = ("bench", "rows")
+
+#: speedup floors (1.0 = must win; 0.95 = 5% timer-noise allowance)
+MIN_BLOCKED_VS_TREE = 1.0       # single-device, n >= 2048
+MIN_COMPRESSED_VS_F32 = 0.95    # distributed collectives, n >= 2048
+MIN_TUNED_ABOVE_XOVER = 0.95    # tuned engine at/above the crossover
+MAX_REL_VS_SINGLE = 5e-2        # distributed-vs-single-device agreement
+
+
+def _load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def _finite_pos(v):
+    return isinstance(v, (int, float)) and not isinstance(v, bool) \
+        and math.isfinite(v) and v > 0
+
+
+# ---------------------------------------------------------------------------
+# gates
+# ---------------------------------------------------------------------------
+def gate_cholesky(payload) -> list[str]:
+    """Blocked-vs-tree single-device gate (BENCH_cholesky.json)."""
+    rows = payload.get("rows", [])
+    if not rows:
+        return ["BENCH_cholesky.json has no rows"]
+    errs = []
+    for r in rows:
+        if r["n"] >= 2048 \
+                and r["speedup_blocked_vs_tree"] < MIN_BLOCKED_VS_TREE:
+            errs.append(f"blocked slower than tree at n={r['n']}: "
+                        f"{r['speedup_blocked_vs_tree']}")
+        if r["eqns_blocked"] >= r["eqns_tree"]:
+            errs.append(f"dispatch count not reduced at n={r['n']}: "
+                        f"blocked={r['eqns_blocked']} tree={r['eqns_tree']}")
+    return errs
+
+
+def gate_dist(payload) -> list[str]:
+    """Distributed collectives + tuned-selection gate (BENCH_dist.json)."""
+    rows = payload.get("rows", [])
+    if not rows:
+        skip = payload.get("skipped")
+        return [f"BENCH_dist.json has no rows"
+                + (f" (bench skipped: {skip})" if skip else "")]
+    errs = []
+    for r in rows:
+        n = r["n"]
+        if n >= 2048 \
+                and r["speedup_compressed_vs_f32"] < MIN_COMPRESSED_VS_F32:
+            errs.append(f"compressed collectives slower than f32 at n={n}: "
+                        f"{r['speedup_compressed_vs_f32']}")
+        if r["rel_vs_single_device"] > MAX_REL_VS_SINGLE:
+            errs.append(f"dist far from single-device engine at n={n}: "
+                        f"rel={r['rel_vs_single_device']}")
+        # -- tuned selection (rows written by bench_dist since the tuner) --
+        if "tuned_engine" not in r:
+            errs.append(f"row n={n} has no tuned_engine — bench_dist ran "
+                        "without the tuning integration")
+            continue
+        if r["tuned_source"] == "default":
+            errs.append(f"tuned selection at n={n} fell back to defaults "
+                        "(committed tuning DB missing or not consulted)")
+        if not r.get("auto_matches_tuned", False):
+            errs.append(f"engine='auto' traces a different computation "
+                        f"than the tuned engine at n={n}")
+        xover = r.get("tuned_crossover_n")
+        want = "tree" if (xover is None or n < xover) else "blocked"
+        if r["tuned_engine"] != want:
+            errs.append(f"tuned engine at n={n} is {r['tuned_engine']}, "
+                        f"expected {want} (crossover_n={xover})")
+        floor = 1.0 if want == "tree" else MIN_TUNED_ABOVE_XOVER
+        if r["speedup_tuned_vs_tree"] < floor:
+            errs.append(f"tuned engine loses at n={n}: "
+                        f"speedup_tuned_vs_tree="
+                        f"{r['speedup_tuned_vs_tree']} < {floor}")
+    return errs
+
+
+def check_schema(payload, name) -> list[str]:
+    """Structural check for one BENCH_*.json artifact."""
+    errs = []
+    for k in REQUIRED_KEYS.get(name, DEFAULT_KEYS):
+        if k not in payload:
+            errs.append(f"{name}: missing top-level key {k!r}")
+    rows = payload.get("rows")
+    if not isinstance(rows, list) or not rows:
+        skip = payload.get("skipped") if isinstance(payload, dict) else None
+        errs.append(f"{name}: rows empty or not a list"
+                    + (f" (bench skipped: {skip})" if skip else ""))
+        return errs
+    for i, r in enumerate(rows):
+        if not isinstance(r, dict) or "n" not in r:
+            errs.append(f"{name}: row {i} malformed (no 'n'): {r!r}")
+            continue
+        for k, v in r.items():
+            if k.startswith("us_") and not _finite_pos(v):
+                errs.append(f"{name}: row n={r['n']} timing {k}={v!r} "
+                            "not finite-positive")
+    return errs
+
+
+def gate_db(payload) -> list[str]:
+    """Tuning-database schema validation (delegates to repro.tune.db)."""
+    src = os.path.join(_ROOT, "src")
+    if src not in sys.path:
+        sys.path.insert(0, src)
+    from repro.tune.db import validate_db
+    return validate_db(payload)
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("gate", choices=("cholesky", "dist", "schema", "db"))
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="artifact path(s); default: the repo-root "
+                         "BENCH_* file(s) for the gate")
+    args = ap.parse_args(argv)
+
+    if args.gate == "schema":
+        paths = ([args.json] if args.json
+                 else sorted(glob.glob(os.path.join(_ROOT, "BENCH_*.json"))))
+        if not paths:
+            print("schema gate: no BENCH_*.json artifacts found")
+            return 1
+        errs = []
+        for p in paths:
+            errs += check_schema(_load(p), os.path.basename(p))
+            print(f"schema checked: {os.path.basename(p)}")
+    elif args.gate == "db":
+        if not args.json:
+            ap.error("db gate needs --json <tuning-db.json>")
+        errs = gate_db(_load(args.json))
+    else:
+        default = os.path.join(_ROOT, f"BENCH_{args.gate}.json")
+        payload = _load(args.json or default)
+        gate = gate_cholesky if args.gate == "cholesky" else gate_dist
+        errs = gate(payload)
+        if not errs:
+            key = ("speedup_blocked_vs_tree" if args.gate == "cholesky"
+                   else "speedup_compressed_vs_f32")
+            print(f"{args.gate} gate OK:",
+                  [(r["n"], r[key]) for r in payload["rows"]])
+
+    for e in errs:
+        print(f"PERF GATE FAIL: {e}", file=sys.stderr)
+    return 1 if errs else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
