@@ -1,0 +1,23 @@
+"""Precision-conformance auditor: does the executed solver match the plan?
+
+Static verification in four layers, none of which runs the solver:
+
+* :mod:`repro.audit.dtypeflow` — jaxpr dtype-flow analysis (which dots
+  run at which effective precision, where values are rounded, what the
+  collectives move),
+* :mod:`repro.audit.conformance` — reconciles traced flows against
+  ``PrecisionPlan`` / ``ShardedPlan`` expectations,
+* :mod:`repro.audit.hloaudit` — re-checks the *compiled* HLO census,
+* :mod:`repro.audit.kernelaudit` — static Pallas kernel invariants,
+* :mod:`repro.audit.lint` — AST layering rules (stdlib-only),
+* :mod:`repro.audit.selftest` — seeded mutations proving detection.
+
+Run ``python -m repro.audit --smoke`` (CI) or ``--full``.
+
+This ``__init__`` stays import-light on purpose: ``tools/perf_gate.py``
+imports :mod:`repro.audit.report` from a jax-free venv.
+"""
+from repro.audit.report import (  # noqa: F401
+    SCHEMA_VERSION, CheckResult, Violation, build_report, load_report,
+    validate_report,
+)

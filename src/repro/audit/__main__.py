@@ -1,0 +1,111 @@
+"""CLI driver: ``python -m repro.audit [--smoke|--full] [--json OUT]``.
+
+``--smoke`` (the CI default) audits two representative ladders at one
+size plus the kernel/lint/HLO checks — a couple of minutes on a laptop
+CPU. ``--full`` sweeps every f32-high paper ladder, both solve/refine
+consumers, the uncompressed-wire variant, and the mutation self-test.
+
+Exit status is the audit verdict: 0 clean (warnings allowed), 1 any
+error-severity violation, so CI can gate on the process code while the
+JSON artifact carries the details.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+#: smoke ladders: one quantized-f16, one int8 (covers both round shapes)
+_SMOKE_CFGS = ("f16x3_f32", "int8x3_f32")
+#: every paper ladder with an f32 container (f64 containers route to the
+#: jnp oracle and pure_f16 has no wide carrier to round from)
+_FULL_CFGS = ("pure_f32", "f16_f32", "f16x3_f32", "f16x5_f32",
+              "bf16_f32", "bf16x3_f32", "int8_f32", "int8x3_f32")
+_N_JAXPR = 1024
+_N_HLO = 512
+_N_DIST, _P_DIST = 1024, 4
+
+
+def _ensure_devices():
+    """Give the dist audits a 4-way host mesh — must run before any jax
+    import anywhere in the process."""
+    if "jax" in sys.modules:             # too late to change the flag
+        return
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + " --xla_force_host_platform_device_count=4").strip()
+
+
+def _run(mode: str, selftest: bool) -> list:
+    from repro.audit import conformance, hloaudit
+    from repro.audit.kernelaudit import audit_kernels
+    from repro.audit.lint import lint_repo
+    from repro.core.precision import PAPER_CONFIGS
+    cfgs = _SMOKE_CFGS if mode == "smoke" else _FULL_CFGS
+    results = [lint_repo(), audit_kernels()]
+    for key in cfgs:
+        cfg = PAPER_CONFIGS[key]
+        results.append(conformance.audit_blocked(_N_JAXPR, cfg))
+    rep = PAPER_CONFIGS[_SMOKE_CFGS[0]]
+    results.append(conformance.audit_dist(_N_DIST, rep, _P_DIST))
+    results.append(hloaudit.audit_hlo_single(_N_HLO, rep))
+    results.append(hloaudit.audit_hlo_dist(_N_DIST, rep, _P_DIST))
+    if mode == "full":
+        results.append(conformance.audit_solve(_N_JAXPR, rep))
+        results.append(conformance.audit_refine(_N_JAXPR, rep))
+        for key in ("int8x3_f32", "bf16_f32"):
+            results.append(conformance.audit_dist(
+                _N_DIST, PAPER_CONFIGS[key], _P_DIST))
+        results.append(conformance.audit_dist(
+            _N_DIST, rep, _P_DIST, compress=False))
+        results.append(hloaudit.audit_hlo_dist(
+            _N_DIST, rep, _P_DIST, compress=False))
+    if selftest or mode == "full":
+        from repro.audit.selftest import run_selftest
+        results.append(run_selftest())
+    return results
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.audit",
+        description="Static precision-conformance audit of the solver "
+                    "against its PrecisionPlan.")
+    g = ap.add_mutually_exclusive_group()
+    g.add_argument("--smoke", action="store_true",
+                   help="CI subset: 2 ladders, one size (default)")
+    g.add_argument("--full", action="store_true",
+                   help="all f32-high ladders + solve/refine/uncompressed "
+                        "+ mutation self-test")
+    ap.add_argument("--selftest", action="store_true",
+                    help="also run the seeded-mutation self-test")
+    ap.add_argument("--json", metavar="OUT",
+                    help="write the schema'd violation report here")
+    args = ap.parse_args(argv)
+    mode = "full" if args.full else "smoke"
+
+    _ensure_devices()
+    from repro.audit.report import build_report
+    results = _run(mode, args.selftest)
+    report = build_report(mode, results)
+
+    for res in results:
+        mark = "ok " if res.ok else "FAIL"
+        print(f"[{mark}] {res.name:16s} {res.target}")
+        for v in res.violations:
+            print(f"       {v}")
+    s = report["summary"]
+    print(f"-- {s['checks']} checks, {s['errors']} errors, "
+          f"{s['warns']} warnings ({mode})")
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+        print(f"-- report written to {args.json}")
+    return 1 if s["errors"] else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

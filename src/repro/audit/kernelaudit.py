@@ -1,0 +1,265 @@
+"""Static Pallas kernel checks: accumulators, VMEM budget, index bounds.
+
+The jaxpr/HLO audits see the *CPU reference* lowering; the Pallas kernels
+in :mod:`repro.kernels` are what actually runs on an MXU backend, and
+three of their invariants are checkable without any accelerator:
+
+* **kernel-accumulator-dtype** — every VMEM scratch accumulator must be
+  f32. A bf16 accumulator silently halves the mantissa of every partial
+  sum and no numeric test at leaf-sized n will catch it (the error is
+  O(sqrt(k)) ulps), so this is a static rule, not a tolerance.
+* **kernel-vmem-budget** — the per-grid-step working set (double-buffered
+  in/out blocks + scratch) must fit the ~16 MiB/core VMEM an MXU offers;
+  an oversize block spec fails at Mosaic compile time on hardware but
+  passes silently in interpret mode and on CPU.
+* **kernel-index-bounds** — every ``BlockSpec`` index map, evaluated at
+  every grid point of the paper geometries, must return block indices
+  inside the (padded) operand. The triangular-packed maps
+  (``_tri_decode``) are exactly the kind of closed-form index arithmetic
+  that goes out of bounds one tile past a boundary.
+
+Capture works by patching ``jax.experimental.pallas.pallas_call`` with a
+recording wrapper and tracing each kernel entry under ``jax.eval_shape``
+at ``PAPER_CONFIGS`` geometries (leaf = 256): nothing executes, but every
+``pallas_call`` records its grid, specs, scratch shapes and operand
+avals. Index maps are then evaluated eagerly with concrete ints.
+"""
+from __future__ import annotations
+
+import contextlib
+import itertools
+from dataclasses import dataclass
+
+from repro.audit.report import CheckResult, Violation
+
+#: default per-grid-step VMEM budget — one TPU core's worth (see
+#: /opt/skills/guides/pallas_guide.md: ~16 MB VMEM per core).
+VMEM_BUDGET_BYTES = 16 * 1024 * 1024
+
+#: grid-step footprint model: streamed in/out blocks are double-buffered
+#: by the Pallas pipeline, scratch is single-copy.
+_STREAM_COPIES = 2
+
+
+@dataclass
+class KernelCall:
+    """One recorded ``pallas_call`` with everything the checks need."""
+    name: str
+    grid: tuple
+    in_specs: tuple
+    out_specs: tuple
+    scratch: tuple
+    operands: tuple          # ((shape, np-dtype-name), ...) per in_spec
+    out_shapes: tuple        # ((shape, np-dtype-name), ...) per out_spec
+    entry: str = ""
+
+
+def _kernel_name(fn) -> str:
+    while hasattr(fn, "func"):          # unwrap functools.partial
+        fn = fn.func
+    return getattr(fn, "__name__", repr(fn))
+
+
+def _as_tuple(x):
+    if x is None:
+        return ()
+    return tuple(x) if isinstance(x, (list, tuple)) else (x,)
+
+
+@contextlib.contextmanager
+def _capture(into: list):
+    """Patch ``pallas_call`` so every traced call appends a KernelCall."""
+    import numpy as np
+    import jax.experimental.pallas as plmod
+    real = plmod.pallas_call
+
+    def recording(kernel, *args, **kw):
+        inner = real(kernel, *args, **kw)
+
+        def wrapped(*ops):
+            outs = _as_tuple(kw.get("out_shape"))
+            into.append(KernelCall(
+                name=_kernel_name(kernel),
+                grid=_as_tuple(kw.get("grid")),
+                in_specs=_as_tuple(kw.get("in_specs")),
+                out_specs=_as_tuple(kw.get("out_specs")),
+                scratch=_as_tuple(kw.get("scratch_shapes")),
+                operands=tuple((tuple(o.shape), np.dtype(o.dtype).name)
+                               for o in ops),
+                out_shapes=tuple((tuple(o.shape), np.dtype(o.dtype).name)
+                                 for o in outs)))
+            return inner(*ops)
+        return wrapped
+
+    plmod.pallas_call = recording
+    try:
+        yield
+    finally:
+        plmod.pallas_call = real
+
+
+def _paper_entries(leaf: int):
+    """Yield ``(entry_label, thunk)`` pairs; each thunk eval_shapes one
+    kernel entry at a paper geometry (leaf-multiple panels, 256 leaf)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.plan import build_plan
+    from repro.core.precision import PAPER_CONFIGS
+    from repro.kernels import panel as kpanel
+    from repro.kernels import potrf as kpotrf
+    from repro.kernels import qgemm as kqgemm
+    from repro.kernels import residual as kresidual
+    from repro.kernels import syrk as ksyrk
+    from repro.kernels import trsm as ktrsm
+
+    b = leaf
+    m, n = 3 * b, 4 * b
+    S = jax.ShapeDtypeStruct
+
+    yield "qgemm[f16]", lambda: jax.eval_shape(
+        lambda a, bb: kqgemm.qgemm(a, bb, 1.0),
+        S((m, b), jnp.float16), S((b, b), jnp.float16))
+    yield "qgemm[int8,c,trans_b]", lambda: jax.eval_shape(
+        lambda a, bb, c: kqgemm.qgemm(a, bb, 1.0, c=c, beta=1.0,
+                                      trans_b=True),
+        S((m, b), jnp.int8), S((b, b), jnp.int8), S((m, b), jnp.float32))
+    yield "trsm_leaf", lambda: jax.eval_shape(
+        lambda bb, linv: ktrsm.trsm_leaf(bb, linv=linv),
+        S((m, b), jnp.float32), S((b, b), jnp.float32))
+    yield "potrf_leaf", lambda: jax.eval_shape(
+        kpotrf.potrf_leaf, S((b, b), jnp.float32))
+    yield "tri_inv_leaf", lambda: jax.eval_shape(
+        kpotrf.tri_inv_leaf, S((b, b), jnp.float32))
+    yield "syrk_leaf", lambda: jax.eval_shape(
+        lambda c, a: ksyrk.syrk_leaf(c, a, 1.0, 1.0),
+        S((b, b), jnp.float32), S((b, n), jnp.float16))
+    yield "syrk_packed", lambda: jax.eval_shape(
+        lambda c, a: ksyrk.syrk_packed(c, a, 1.0, 1.0),
+        S((n, n), jnp.float32), S((n, 2 * b), jnp.float16))
+    yield "residual_fused", lambda: jax.eval_shape(
+        kresidual.residual_fused,
+        S((n, n), jnp.float32), S((n, 8), jnp.float32),
+        S((n, 8), jnp.float32))
+
+    meta = build_plan(n, PAPER_CONFIGS["f16x3_f32"]).panel_meta(0)
+    yield "panel_update", lambda: jax.eval_shape(
+        lambda linv, a21, c: kpanel.panel_update(
+            linv, a21, c, store_names=meta.store_names,
+            store_quants=meta.store_quants, pair_names=meta.pair_names,
+            pair_quants=meta.pair_quants, rounding=True),
+        S((b, b), jnp.float32), S((m, b), jnp.float16),
+        S((m, m), jnp.float32))
+
+
+def capture_paper_kernels(leaf: int = 256) -> list:
+    """Trace every kernel entry at paper geometries; return KernelCalls.
+
+    ``tri_inv_leaf`` is traced both standalone and inside ``trsm_leaf``;
+    duplicate (entry, kernel) records are harmless — each is checked
+    against its own captured geometry.
+    """
+    import jax
+    # the entries are jit-wrapped: a cached trace would skip the patched
+    # pallas_call entirely and the audit would silently see nothing
+    jax.clear_caches()
+    calls: list[KernelCall] = []
+    with _capture(calls):
+        mark = 0
+        for label, thunk in _paper_entries(leaf):
+            thunk()
+            for c in calls[mark:]:
+                c.entry = label
+            mark = len(calls)
+    return calls
+
+
+def _block_bytes(spec, shape, dtype_name) -> int:
+    from repro.core.dtypes import BYTES
+    from repro.core.dtypes import NP_TO_HLO
+    bs = spec.block_shape if spec.block_shape is not None else shape
+    elems = 1
+    for d in bs:
+        elems *= int(d)
+    return elems * BYTES[NP_TO_HLO[dtype_name]]
+
+
+def _index_violations(call: KernelCall, target: str) -> list:
+    """Evaluate every index map at every grid point; flag OOB blocks."""
+    import jax.numpy as jnp
+    viols = []
+    points = (list(itertools.product(*(range(g) for g in call.grid)))
+              if call.grid else [()])
+    specs = ([("in", i, s, call.operands[i])
+              for i, s in enumerate(call.in_specs)]
+             + [("out", i, s, call.out_shapes[i])
+                for i, s in enumerate(call.out_specs)])
+    for side, i, spec, (shape, _) in specs:
+        bs = spec.block_shape if spec.block_shape is not None else shape
+        nblocks = [-(-int(d) // int(t)) for d, t in zip(shape, bs)]
+        for pt in points:
+            # index maps may do jnp arithmetic (_tri_decode) — feed them
+            # concrete jnp scalars, evaluated eagerly
+            idx = spec.index_map(*(jnp.int32(v) for v in pt))
+            idx = tuple(int(v) for v in _as_tuple(idx))
+            if len(idx) != len(nblocks):
+                viols.append(Violation(
+                    "kernel-index-bounds", target,
+                    f"{call.entry}/{call.name}: {side}_spec[{i}] index map "
+                    f"returned rank-{len(idx)} block index for rank-"
+                    f"{len(nblocks)} operand at grid point {pt}"))
+                break
+            if any(v < 0 or v >= nb for v, nb in zip(idx, nblocks)):
+                viols.append(Violation(
+                    "kernel-index-bounds", target,
+                    f"{call.entry}/{call.name}: {side}_spec[{i}] maps grid "
+                    f"point {pt} to block {idx}, outside the "
+                    f"{tuple(nblocks)}-block operand of shape {shape}"))
+                break
+    return viols
+
+
+def audit_kernels(leaf: int = 256, *,
+                  vmem_budget: int = VMEM_BUDGET_BYTES) -> CheckResult:
+    """Run all three static checks over every captured kernel call."""
+    import numpy as np
+    target = f"kernels[leaf={leaf}]"
+    try:
+        calls = capture_paper_kernels(leaf)
+    except Exception as exc:  # pallas unavailable -> report, don't crash
+        return CheckResult("kernels", target, [Violation(
+            "kernel-untestable", target,
+            f"could not trace Pallas kernels: {exc!r}", severity="warn")])
+    if not calls:
+        return CheckResult("kernels", target, [Violation(
+            "kernel-untestable", target,
+            "no pallas_call captured — the recording patch missed every "
+            "kernel entry (trace cache? import path?)")])
+    viols = []
+    for call in calls:
+        where = f"{call.entry}/{call.name}"
+        for j, sc in enumerate(call.scratch):
+            dt = np.dtype(sc.dtype)
+            if dt.kind == "f" and dt.itemsize != 4:
+                viols.append(Violation(
+                    "kernel-accumulator-dtype", target,
+                    f"{where}: scratch[{j}] is a {dt.name} accumulator "
+                    f"({tuple(sc.shape)}); partial sums must accumulate "
+                    "in f32"))
+        step = 0
+        for spec, (shape, dtn) in zip(call.in_specs, call.operands):
+            step += _STREAM_COPIES * _block_bytes(spec, shape, dtn)
+        for spec, (shape, dtn) in zip(call.out_specs, call.out_shapes):
+            step += _STREAM_COPIES * _block_bytes(spec, shape, dtn)
+        for sc in call.scratch:
+            elems = 1
+            for d in sc.shape:
+                elems *= int(d)
+            step += elems * np.dtype(sc.dtype).itemsize
+        if step > vmem_budget:
+            viols.append(Violation(
+                "kernel-vmem-budget", target,
+                f"{where}: per-grid-step working set {step} B "
+                f"(double-buffered blocks + scratch) exceeds the "
+                f"{vmem_budget} B VMEM budget"))
+        viols.extend(_index_violations(call, target))
+    return CheckResult("kernels", target, viols)

@@ -1,0 +1,174 @@
+"""Repo lint pack: AST rules for the layering invariants the audits rely on.
+
+Four rules, each protecting an invariant that the runtime checks in this
+package *assume* rather than verify:
+
+* **plan-trace-free** — ``core/plan.py`` must not import jax. The whole
+  audit design rests on plans being static pure-numpy tables that can be
+  compared to traced programs; a jax import means plan construction could
+  itself trace and the comparison becomes circular.
+* **db-stdlib-only** — ``tune/db.py`` must not import jax (module level
+  or inline). The CI perf gates (``tools/perf_gate.py``) import it from a
+  bare-venv context; a device-runtime import there breaks every gate.
+* **kernel-dtype-literal** — ``kernels/*.py`` must not hardcode narrow
+  ladder dtypes (``jnp.float16`` / ``jnp.bfloat16`` / ``jnp.int8``) or
+  magic range constants (``65504``); they come from
+  ``repro.core.precision.DTYPES`` / ``RMAX`` so a ladder change (f8)
+  lands in one table, not a grep hunt. f32/f64 literals are fine —
+  accumulators and routing are genuinely fixed-width.
+* **search-injected-timer** — ``tune/search.py`` may touch the wall
+  clock only inside the injected-timer default (``timeit``); everywhere
+  else timing flows through the ``timer`` parameter, and RNG must be
+  seeded. This keeps the autotuner replayable in tests with a fake timer.
+
+Suppress a single line with ``# audit: allow(<rule>)``.
+
+Stdlib-only (``ast`` + ``re``): runs in the CI lint job next to ruff,
+before any venv has jax installed.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+
+from repro.audit.report import CheckResult, Violation
+
+#: narrow dtype attribute names banned in kernels/ (wide ones routed)
+_NARROW_ATTRS = {"float16", "bfloat16", "int8", "float8_e4m3fn",
+                 "float8_e5m2"}
+#: magic f16 range constant (RMAX["f16"])
+_MAGIC_CONSTS = {65504, 65504.0}
+
+_ALLOW_RE = re.compile(r"#\s*audit:\s*allow\(([a-z0-9-]+)\)")
+
+RULES = ("plan-trace-free", "db-stdlib-only", "kernel-dtype-literal",
+         "search-injected-timer")
+
+
+def repo_root() -> Path:
+    """``src/``'s parent — the directory holding ``pyproject.toml``."""
+    return Path(__file__).resolve().parents[3]
+
+
+def _allows(source_lines: list[str]) -> dict[int, set[str]]:
+    out: dict[int, set[str]] = {}
+    for i, line in enumerate(source_lines, 1):
+        for m in _ALLOW_RE.finditer(line):
+            out.setdefault(i, set()).add(m.group(1))
+    return out
+
+
+class _Lint:
+    def __init__(self, path: Path, rel: str):
+        self.path, self.rel = path, rel
+        src = path.read_text()
+        self.tree = ast.parse(src, filename=str(path))
+        self.allows = _allows(src.splitlines())
+        self.viols: list[Violation] = []
+
+    def flag(self, rule: str, node: ast.AST, msg: str):
+        line = getattr(node, "lineno", 0)
+        if rule in self.allows.get(line, ()):
+            return
+        self.viols.append(Violation(rule, self.rel, msg,
+                                    path=self.rel, line=line))
+
+    # -- rule bodies -------------------------------------------------------
+    def no_jax_imports(self, rule: str, why: str):
+        for node in ast.walk(self.tree):
+            mods = ()
+            if isinstance(node, ast.Import):
+                mods = tuple(a.name for a in node.names)
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                mods = (node.module,)
+            for mod in mods:
+                if mod == "jax" or mod.startswith("jax."):
+                    self.flag(rule, node,
+                              f"imports {mod} at line {node.lineno}; {why}")
+
+    def no_narrow_dtype_literals(self):
+        for node in ast.walk(self.tree):
+            if (isinstance(node, ast.Attribute)
+                    and isinstance(node.value, ast.Name)
+                    and node.value.id in ("jnp", "np", "jax")
+                    and node.attr in _NARROW_ATTRS):
+                self.flag(
+                    "kernel-dtype-literal", node,
+                    f"hardcoded {node.value.id}.{node.attr} at line "
+                    f"{node.lineno}; use repro.core.precision.DTYPES so "
+                    "ladder growth lands in one table")
+            elif (isinstance(node, ast.Constant)
+                    and type(node.value) in (int, float)
+                    and node.value in _MAGIC_CONSTS):
+                self.flag(
+                    "kernel-dtype-literal", node,
+                    f"magic range constant {node.value} at line "
+                    f"{node.lineno}; use repro.core.precision.RMAX")
+
+    def timer_confined(self):
+        stack: list[str] = []
+
+        def visit(node):
+            is_fn = isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))
+            if is_fn:
+                stack.append(node.name)
+            if (isinstance(node, ast.Attribute)
+                    and isinstance(node.value, ast.Name)
+                    and node.value.id in ("time", "datetime")
+                    and "timeit" not in stack):
+                self.flag(
+                    "search-injected-timer", node,
+                    f"wall-clock access {node.value.id}.{node.attr} at "
+                    f"line {node.lineno} outside the injected-timer "
+                    "default; route timing through the timer parameter")
+            if (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "default_rng"
+                    and not node.args and not node.keywords):
+                self.flag(
+                    "search-injected-timer", node,
+                    f"unseeded default_rng() at line {node.lineno}; "
+                    "tuning runs must be replayable — pass a seed")
+            for child in ast.iter_child_nodes(node):
+                visit(child)
+            if is_fn:
+                stack.pop()
+
+        visit(self.tree)
+
+
+def lint_repo(root: Path | None = None) -> CheckResult:
+    """Run all four rules; returns one CheckResult for the lint pack."""
+    root = Path(root) if root else repo_root()
+    src = root / "src" / "repro"
+    viols: list[Violation] = []
+
+    def run(relpath: str, fn, *args):
+        p = src / relpath
+        rel = f"src/repro/{relpath}"
+        if not p.exists():
+            viols.append(Violation("lint-missing-file", rel,
+                                   f"{rel} not found", severity="warn"))
+            return
+        lint = _Lint(p, rel)
+        fn(lint, *args)
+        viols.extend(lint.viols)
+
+    run("core/plan.py", _Lint.no_jax_imports, "plan-trace-free",
+        "plans must stay static pure-numpy tables")
+    run("tune/db.py", _Lint.no_jax_imports, "db-stdlib-only",
+        "CI perf gates import this from a jax-free venv")
+    for kp in sorted((src / "kernels").glob("*.py")):
+        run(f"kernels/{kp.name}", _Lint.no_narrow_dtype_literals)
+    run("tune/search.py", _Lint.timer_confined)
+    return CheckResult("lint", "src/repro", viols)
+
+
+if __name__ == "__main__":      # CI lint job: no jax in that venv
+    import sys
+    res = lint_repo()
+    for v in res.violations:
+        print(v)
+    print(f"lint pack: {len(res.violations)} finding(s)")
+    sys.exit(0 if res.ok else 1)

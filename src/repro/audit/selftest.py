@@ -1,0 +1,155 @@
+"""Seeded-mutation self-test: prove the auditor *detects*, not just runs.
+
+A conformance checker that always passes is indistinguishable from one
+that checks nothing, so CI runs this before trusting a clean audit. Each
+mutation plants exactly one precision bug in a seam the real executor
+honors, re-runs the relevant audit with *pristine* expectations, and
+demands a nonzero finding that names the mutated tile/panel:
+
+1. **flip-compute-level** — one trailing pair tile's compute level is
+   flipped in the executed plan's table. Both the static table diff and
+   the traced dot-precision check must localize it.
+2. **drop-storage-round** — one trailing row tile's storage rounding is
+   deleted (its ``panel_meta`` claims a wide store), leaving the tables
+   pristine: only the meta diff / traced missing-round check can see it.
+3. **lossy-wire** — one panel's collective is swapped onto a lossy f16
+   wire in an all-f32 ladder by patching the sharded-plan seam the
+   distributed executor reads. The traced wire-dtype check must name the
+   panel.
+
+Mutations use n/P geometries the clean audits don't, so no trace cache
+can leak a pristine jaxpr into a mutated run (the entry points are
+un-jitted, this is belt and braces).
+"""
+from __future__ import annotations
+
+import contextlib
+
+from repro.audit.report import CheckResult, Violation
+
+#: geometry reserved for mutations (distinct from smoke/full audits);
+#: P=2 so the 6-tile plan splits evenly
+_N, _P = 1536, 2
+_CFG = "f16x3_f32"
+
+
+def _expect(name: str, result: CheckResult, rules: tuple,
+            needle: str) -> list:
+    """The mutated audit must fail via one of ``rules`` AND localize the
+    mutation (``needle`` appears in some violation)."""
+    viols = []
+    hits = [v for v in result.violations if v.rule in rules]
+    if not hits:
+        viols.append(Violation(
+            "selftest-miss", name,
+            f"seeded mutation went undetected: audit returned "
+            f"{[v.rule for v in result.violations]}, expected one of "
+            f"{list(rules)}"))
+        return viols
+    blob = " ".join(str(v) + f" panel={v.panel} tile={v.tile}"
+                    for v in hits)
+    if needle not in blob:
+        viols.append(Violation(
+            "selftest-miss", name,
+            f"mutation detected but not localized: no violation names "
+            f"{needle!r} (got: {blob[:300]})"))
+    return viols
+
+
+def _mut_flip_level():
+    from repro.audit.conformance import audit_blocked
+    from repro.core.plan import PrecisionPlan
+    from repro.core.precision import PAPER_CONFIGS
+    cfg = PAPER_CONFIGS[_CFG]
+    mut = PrecisionPlan(_N, cfg)
+    mut.levels = mut.levels.copy()
+    i, j = mut.ntiles - 1, mut.ntiles - 2
+    old = int(mut.levels[i, j])
+    new = 0 if old != 0 else len(cfg.levels) - 1
+    mut.levels[i, j] = mut.levels[j, i] = new
+    res = audit_blocked(_N, cfg, plan=mut, label="selftest-mutant")
+    return _expect(
+        "flip-compute-level", res,
+        ("plan-table-mismatch", "plan-dot-precision"), f"({i}, {j})")
+
+
+def _mut_drop_round():
+    from repro.audit.conformance import audit_blocked
+    from repro.core.plan import PanelMeta, PrecisionPlan
+    from repro.core.precision import PAPER_CONFIGS
+    cfg = PAPER_CONFIGS[_CFG]
+    base = PrecisionPlan(_N, cfg)
+    ti, tp = base.ntiles - 1, 0         # last row tile of panel 0
+
+    class _NoRound(PrecisionPlan):
+        """Same tables, but one tile's storage round deleted from the
+        meta the executor compiles in."""
+
+        def __init__(self):
+            self.__dict__.update(base.__dict__)
+
+        def panel_meta(self, p):
+            meta = PrecisionPlan.panel_meta(self, p)
+            if p != tp:
+                return meta
+            k = ti - (p + 1)
+            sn = list(meta.store_names)
+            sq = list(meta.store_quants)
+            sn[k], sq[k] = self.cfg.high_name, False
+            return PanelMeta(tuple(sn), tuple(sq), meta.pair_names,
+                             meta.pair_quants)
+
+    res = audit_blocked(_N, cfg, plan=_NoRound(), label="selftest-mutant")
+    return _expect(
+        "drop-storage-round", res,
+        ("plan-meta-mismatch", "plan-missing-round"), f"({ti}, {tp})")
+
+
+def _mut_lossy_wire():
+    import repro.core.distributed as dist
+    from repro.audit.conformance import audit_dist
+    from repro.core.plan import ShardedPlan, build_plan
+    from repro.core.precision import PAPER_CONFIGS
+    cfg = PAPER_CONFIGS["pure_f32"]     # every wire should be lossless
+
+    class _Lossy:
+        """ShardedPlan view whose panel-0 collective claims an f16 wire."""
+
+        def __init__(self, sp):
+            self._sp = sp
+
+        def comm_name(self, j):
+            return "f16" if j == 0 else self._sp.comm_name(j)
+
+        def comm_quant(self, j):
+            return False if j == 0 else self._sp.comm_quant(j)
+
+        def __getattr__(self, k):
+            return getattr(self._sp, k)
+
+    @contextlib.contextmanager
+    def patched():
+        real = dist.shard
+        dist.shard = lambda plan, ns: _Lossy(ShardedPlan(plan, ns))
+        try:
+            yield
+        finally:
+            dist.shard = real
+
+    pristine = ShardedPlan(build_plan(_N, cfg), _P)
+    with patched():
+        res = audit_dist(_N, cfg, _P, sharded=pristine)
+    if any(v.rule == "dist-untestable" for v in res.violations):
+        return [Violation("selftest-skip", "lossy-wire",
+                          "not enough devices to run the wire mutation",
+                          severity="warn")]
+    return _expect("lossy-wire", res, ("collective-wire-dtype",),
+                   "panel 0")
+
+
+def run_selftest() -> CheckResult:
+    """Run all three mutations; ok iff every one was caught + localized."""
+    viols = []
+    for mut in (_mut_flip_level, _mut_drop_round, _mut_lossy_wire):
+        viols.extend(mut())
+    return CheckResult("selftest", "seeded-mutations", viols)

@@ -16,9 +16,8 @@ from __future__ import annotations
 import collections
 import dataclasses
 
+from repro.core.dtypes import BYTES as _BYTES  # noqa: F401  (re-export)
 from repro.core.precision import PEAK_FLOPS, PrecisionConfig
-
-_BYTES = {"int8": 1, "f16": 2, "bf16": 2, "f32": 4, "f64": 8}
 
 
 @dataclasses.dataclass

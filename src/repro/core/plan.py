@@ -30,7 +30,15 @@ import functools
 
 import numpy as np
 
+from repro.core.dtypes import BYTES, WIRE_DTYPE
 from repro.core.precision import DTYPES, NARROW, PrecisionConfig
+
+
+def _eff(name: str, container: str) -> str:
+    """Effective precision of a value rounded to ``name`` inside a
+    ``container``-dtype array (the CPU oracles keep narrow values in
+    wide containers): the narrower of the two."""
+    return name if BYTES[name] < BYTES[container] else container
 
 
 @dataclasses.dataclass(frozen=True)
@@ -164,6 +172,94 @@ class PrecisionPlan:
                             for row in pair_names)
         return PanelMeta(store_names, store_quants, pair_names, pair_quants)
 
+    # -- audit lookup tables (consumed by repro.audit.conformance) ---------
+    def panel_dot_flops(self, p: int, container: str | None = None) -> dict:
+        """Expected GEMM FLOPs by *effective* dtype name for the blocked
+        executor's panel-``p`` update: one ``2 b^3`` TRSM dot per
+        trailing row tile at its storage precision, one ``2 b^3``
+        trailing dot per pair tile (incl. diagonal) at its compute
+        precision. ``container`` is the carrying array dtype (default:
+        the ladder's high name)."""
+        cn = container or self.cfg.high_name
+        b = self.leaf
+        f = 2.0 * float(b) ** 3
+        out: dict[str, float] = {}
+        rows = range(p + 1, self.ntiles)
+        for i in rows:
+            nm = _eff(self.store_name(i, p), cn)
+            out[nm] = out.get(nm, 0.0) + f
+        for i in rows:
+            for j in range(p + 1, i + 1):
+                nm = _eff(self.name(i, j), cn)
+                out[nm] = out.get(nm, 0.0) + f
+        return out
+
+    def panel_round_elems(self, p: int, container: str | None = None) -> dict:
+        """Expected value-rounding events (elements, by target dtype
+        name) the blocked executor emits for panel ``p``'s update:
+
+        * 2 per trailing row tile at its storage name (the incoming
+          block pre-TRSM and the solved L21 tile),
+        * one full-column re-round per distinct trailing pair dtype
+          (the executor's ``lq`` cache),
+        * one per trailing pair tile at its compute name (the rounded
+          partial sum).
+
+        Rounds onto the container dtype itself are value no-ops and
+        emit no event."""
+        cn = container or self.cfg.high_name
+        if not self.cfg.storage_rounding:
+            return {}
+        b = self.leaf
+        out: dict[str, int] = {}
+        rows = range(p + 1, self.ntiles)
+        for i in rows:
+            nm = self.store_name(i, p)
+            if nm != cn:
+                out[nm] = out.get(nm, 0) + 2 * b * b
+        pair_names = {self.name(i, j) for i in rows
+                      for j in range(p + 1, i + 1)}
+        nt = len(rows)
+        for nm in pair_names:
+            if nm != cn:
+                out[nm] = out.get(nm, 0) + nt * b * b
+        for i in rows:
+            for j in range(p + 1, i + 1):
+                nm = self.name(i, j)
+                if nm != cn:
+                    out[nm] = out.get(nm, 0) + b * b
+        return out
+
+    def diag_round_elems(self, p: int, container: str | None = None) -> dict:
+        """Expected rounding events for panel ``p``'s diagonal tile (the
+        symmetrized input block and the POTRF output, both rounded at
+        the tile's compute name)."""
+        cn = container or self.cfg.high_name
+        if not self.cfg.storage_rounding:
+            return {}
+        nm = self.name(p, p)
+        b = self.leaf
+        return {nm: 2 * b * b} if nm != cn else {}
+
+    def expected_dot_flops(self, container: str | None = None) -> dict:
+        """Whole-factorization GEMM FLOPs by effective dtype name."""
+        out: dict[str, float] = {}
+        for p in range(self.ntiles - 1):
+            for nm, v in self.panel_dot_flops(p, container).items():
+                out[nm] = out.get(nm, 0.0) + v
+        return out
+
+    def expected_round_elems(self, container: str | None = None) -> dict:
+        """Whole-factorization rounding events by target dtype name."""
+        out: dict[str, int] = {}
+        for p in range(self.ntiles):
+            for part in (self.diag_round_elems(p, container),
+                         self.panel_round_elems(p, container)
+                         if p < self.ntiles - 1 else {}):
+                for nm, v in part.items():
+                    out[nm] = out.get(nm, 0) + v
+        return out
+
     # -- census hooks ------------------------------------------------------
     def level_counts(self) -> dict:
         """Lower-triangle tile count per compute dtype name."""
@@ -289,6 +385,17 @@ class ShardedPlan:
 
     def comm_quant(self, j: int) -> bool:
         return _needs_quant(self.comm_name(j), self.cfg)
+
+    def comm_table(self) -> tuple:
+        """Static per-panel collective schedule the auditor reconciles
+        against traced/compiled collectives: ``(panel, name, quant,
+        wire)`` rows, ``wire`` the HLO dtype the gather moves in (16-bit
+        floats bitcast to u16, int8 as s8; see ``_gather_panel``)."""
+        return tuple(
+            {"panel": j, "name": self.comm_name(j),
+             "quant": self.comm_quant(j),
+             "wire": WIRE_DTYPE[self.comm_name(j)]}
+            for j in range(self.nshards))
 
     def describe(self) -> str:
         """Per-panel collective schedule (docs/ARCHITECTURE.md)."""

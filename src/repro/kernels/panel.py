@@ -33,9 +33,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.precision import DTYPES, RMAX
 from repro.kernels.syrk import _tri_decode
-
-_RMAX_F16 = 65504.0
 
 
 def _round_name(x, name: str, quant: bool):
@@ -50,7 +49,7 @@ def _round_name(x, name: str, quant: bool):
         # NAME on the f32 container this kernel runs on is the identity
         return x
     if name == "bf16":
-        return x.astype(jnp.bfloat16).astype(jnp.float32)
+        return x.astype(DTYPES["bf16"]).astype(jnp.float32)
     if name == "int8":
         amax = jnp.max(jnp.abs(x)).astype(jnp.float32)
         alpha = jnp.maximum(amax, jnp.float32(1e-30)) / jnp.float32(127.0)
@@ -58,10 +57,10 @@ def _round_name(x, name: str, quant: bool):
         return q * alpha
     assert name == "f16", name
     if not quant:
-        return x.astype(jnp.float16).astype(jnp.float32)
+        return x.astype(DTYPES["f16"]).astype(jnp.float32)
     amax = jnp.max(jnp.abs(x)).astype(jnp.float32)
-    alpha = jnp.maximum(jnp.float32(1.0), amax / jnp.float32(_RMAX_F16))
-    q = (x / alpha).astype(jnp.float16).astype(jnp.float32)
+    alpha = jnp.maximum(jnp.float32(1.0), amax / jnp.float32(RMAX["f16"]))
+    q = (x / alpha).astype(DTYPES["f16"]).astype(jnp.float32)
     return q * alpha
 
 

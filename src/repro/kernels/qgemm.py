@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.precision import DTYPES
+
 try:  # TPU-specific bits are optional so interpret mode works anywhere.
     from jax.experimental.pallas import tpu as pltpu
     _HAS_PLTPU = True
@@ -97,9 +99,9 @@ def qgemm(a, b, scale, *, c=None, beta=0.0, trans_b=False,
     # is bit-identical to int32 accumulation at our tile sizes. A native
     # s8 MXU kernel (2x rate on v5e) is the on-hardware upgrade path.
     if jnp.issubdtype(a.dtype, jnp.integer):
-        a = a.astype(jnp.bfloat16)
+        a = a.astype(DTYPES["bf16"])
     if jnp.issubdtype(b.dtype, jnp.integer):
-        b = b.astype(jnp.bfloat16)
+        b = b.astype(DTYPES["bf16"])
 
     bm = min(bm, M)
     bn = min(bn, N)

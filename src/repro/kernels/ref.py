@@ -12,6 +12,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.precision import DTYPES
+
 
 def _acc_dtype(*xs):
     """f32 accumulation (MXU semantics) unless an operand is f64 — the
@@ -227,7 +229,7 @@ def syrk_ref(c, a, *, alpha=1.0, beta=1.0, scale=1.0):
     ``scale`` carries the dequantization factor when A is quantized.
     """
     if jnp.issubdtype(a.dtype, jnp.integer):
-        a = a.astype(jnp.bfloat16)      # exact for int8 (|v| <= 127)
+        a = a.astype(DTYPES["bf16"])      # exact for int8 (|v| <= 127)
     ad = _acc_dtype(c, a)
     acc = jnp.dot(a, a.T, preferred_element_type=ad)
     upd = (jnp.asarray(beta, ad) * c.astype(ad)

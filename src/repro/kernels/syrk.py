@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.precision import DTYPES
+
 try:
     from jax.experimental.pallas import tpu as pltpu
     _HAS_PLTPU = True
@@ -68,7 +70,7 @@ def syrk_leaf(c, a, scale, beta, *, bk=DEFAULT_BK, interpret=False):
     n, K = a.shape
     assert c.shape == (n, n)
     if jnp.issubdtype(a.dtype, jnp.integer):
-        a = a.astype(jnp.bfloat16)      # exact for int8 (|v| <= 127)
+        a = a.astype(DTYPES["bf16"])      # exact for int8 (|v| <= 127)
     bk = min(bk, K)
     Kp = (-(-K // bk)) * bk
     if Kp != K:
@@ -142,7 +144,7 @@ def syrk_packed(c, a, scale, beta, *, bn=DEFAULT_BN, bk=DEFAULT_BK,
     n, K = a.shape
     assert c.shape == (n, n)
     if jnp.issubdtype(a.dtype, jnp.integer):
-        a = a.astype(jnp.bfloat16)      # exact for int8 (|v| <= 127)
+        a = a.astype(DTYPES["bf16"])      # exact for int8 (|v| <= 127)
     bn = min(bn, n)
     bk = min(bk, K)
     npad = (-(-n // bn)) * bn

@@ -23,13 +23,11 @@ from __future__ import annotations
 import dataclasses
 import re
 
-_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
-                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
-                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
-                "c64": 8, "c128": 16}
+from repro.core.dtypes import BYTES as _DTYPE_BYTES  # noqa: F401 (re-export)
+from repro.core.dtypes import shape_regex_alternation
 
 _SHAPE_RE = re.compile(
-    r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+    r"\b(" + shape_regex_alternation() + r")\[([0-9,]*)\]")
 _COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(")
 # lazy type match: tuple types may contain /*index=N*/ comments, braces,
 # and '='; the op is the first bare `word(` after the '='.
@@ -181,32 +179,44 @@ _OPERAND_TYPES = re.compile(
     r"\(((?:%?[\w.\-]+(?:,\s*)?)+)\)")
 
 
-def _dot_flops(instr: Instr, comp: Computation) -> float:
-    """2 * prod(output dims) * prod(contracting dims of lhs)."""
+def _dot_info(instr: Instr, comp: Computation):
+    """``(flops, lhs_dtype, rhs_dtype)`` for a dot instruction.
+
+    FLOPs = 2 * prod(output dims) * prod(contracting dims of lhs); the
+    operand dtypes feed the per-dtype-pair classification the precision
+    auditor reconciles against the plan.
+    """
     out_elems, _ = _shape_elems_bytes(instr.out_type)
     mc = _DOT_CONTRACT.search(instr.line)
     args = re.search(r"\b" + re.escape(instr.op) + r"\(([^)]*)\)",
                      instr.line)
     contract = 1
-    if mc and args:
-        dims = None
+    lhs_dt = rhs_dt = None
+    if args:
         # newer jaxlib prints typed operands inline: dot(f32[16,128] %a, ...)
-        m2 = _SHAPE_RE.search(args.group(1))
-        if m2:
-            dims = [int(d) for d in m2.group(2).split(",") if d]
-        else:
-            # untyped operand list: resolve the lhs by name lookup
-            lhs_name = args.group(1).split(",")[0].strip().lstrip("%")
-            lhs = comp.find(lhs_name)
-            if lhs is not None:
-                m3 = _SHAPE_RE.search(lhs.out_type)
-                if m3:
-                    dims = [int(d) for d in m3.group(2).split(",") if d]
-        if dims:
-            for ci in mc.group(1).split(","):
-                if ci:
-                    contract *= dims[int(ci)]
-    return 2.0 * out_elems * contract
+        shapes = _SHAPE_RE.findall(args.group(1))
+        if not shapes:
+            # untyped operand list: resolve each operand by name lookup
+            for a in args.group(1).split(",")[:2]:
+                src = comp.find(a.strip().lstrip("%"))
+                if src is not None:
+                    m3 = _SHAPE_RE.search(src.out_type)
+                    if m3:
+                        shapes.append(m3.groups())
+        if shapes:
+            lhs_dt = shapes[0][0]
+            if len(shapes) > 1:
+                rhs_dt = shapes[1][0]
+            if mc:
+                dims = [int(d) for d in shapes[0][1].split(",") if d]
+                for ci in mc.group(1).split(","):
+                    if ci:
+                        contract *= dims[int(ci)]
+    return 2.0 * out_elems * contract, lhs_dt, rhs_dt
+
+
+def _dot_flops(instr: Instr, comp: Computation) -> float:
+    return _dot_info(instr, comp)[0]
 
 
 # ops whose I/O we count as HBM traffic. Pure layout/expansion ops
@@ -248,6 +258,8 @@ def census(hlo: str) -> dict:
     flops = 0.0
     hbm_bytes = 0.0
     coll = {k: {"count": 0.0, "bytes": 0.0} for k in COLLECTIVES}
+    dot_by_dtype: dict[str, float] = {}
+    coll_by_dtype: dict[str, float] = {}
     loops = []
     for name, comp in comps.items():
         m = mult.get(name, 0)
@@ -255,7 +267,10 @@ def census(hlo: str) -> dict:
             continue
         for i in comp.instrs:
             if i.op == "dot":
-                flops += m * _dot_flops(i, comp)
+                f, ldt, rdt = _dot_info(i, comp)
+                flops += m * f
+                key = f"{ldt or 'unknown'}x{rdt or ldt or 'unknown'}"
+                dot_by_dtype[key] = dot_by_dtype.get(key, 0.0) + m * f
             if i.op in COLLECTIVES or i.op.startswith(
                     tuple(c + "-start" for c in COLLECTIVES)):
                 base = i.op.replace("-start", "")
@@ -263,6 +278,13 @@ def census(hlo: str) -> dict:
                     _, b = _shape_elems_bytes(i.out_type)
                     coll[base]["count"] += m
                     coll[base]["bytes"] += m * b
+                    for dt, dims in _SHAPE_RE.findall(i.out_type):
+                        ne = 1
+                        for d in dims.split(","):
+                            if d:
+                                ne *= int(d)
+                        coll_by_dtype[dt] = (coll_by_dtype.get(dt, 0.0)
+                                             + m * ne * _DTYPE_BYTES[dt])
             if i.op in _MEM_OPS and not i.op.endswith("-done"):
                 _, ob = _shape_elems_bytes(i.out_type)
                 hbm_bytes += m * (ob + _operand_bytes(i, comp))
@@ -270,4 +292,6 @@ def census(hlo: str) -> dict:
                 loops.append((i.name, _trip_count_from_while(i, comps)))
     return {"flops": flops, "hbm_bytes": hbm_bytes,
             "collectives": coll, "loops": sorted(set(loops)),
-            "n_computations": len(comps)}
+            "n_computations": len(comps),
+            "dot_flops_by_dtype": dot_by_dtype,
+            "collective_bytes_by_dtype": coll_by_dtype}

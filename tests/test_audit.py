@@ -1,0 +1,220 @@
+"""Tests for the precision-conformance auditor (repro.audit)."""
+import json
+
+from repro.audit.report import (CheckResult, Violation, build_report,
+                                load_report, validate_report)
+
+CFG_KEY = "f16x3_f32"
+
+
+def _cfg():
+    from repro.core.precision import PAPER_CONFIGS
+    return PAPER_CONFIGS[CFG_KEY]
+
+
+# -- report schema ------------------------------------------------------
+
+def test_report_roundtrip(tmp_path):
+    res = CheckResult("demo", "t", [
+        Violation("some-rule", "t", "boom", panel=1, tile=(2, 1)),
+        Violation("other", "t", "meh", severity="warn")])
+    assert not res.ok
+    rep = build_report("smoke", [res])
+    assert validate_report(rep) == []
+    assert rep["summary"] == {"checks": 1, "violations": 2, "errors": 1,
+                              "warns": 1}
+    p = tmp_path / "r.json"
+    p.write_text(json.dumps(rep))
+    assert load_report(p)["summary"] == rep["summary"]
+
+
+def test_validate_report_rejects_malformed():
+    rep = build_report("smoke", [])
+    del rep["summary"]
+    assert validate_report(rep)
+    assert validate_report({"schema": 999}) != []
+
+
+# -- dtype-flow analysis ------------------------------------------------
+
+def test_dtypeflow_tags_rounded_operands():
+    import jax.numpy as jnp
+    from repro.audit import dtypeflow
+
+    def f(x):
+        x16 = x.astype(jnp.float16).astype(jnp.float32)
+        return x16 @ x16
+
+    res = dtypeflow.trace(f, __import__("jax").ShapeDtypeStruct(
+        (64, 64), jnp.float32))
+    assert [d.eff_name for d in res.dots] == ["f16"]
+    assert res.round_elems_by_name() == {"f16": 64 * 64}
+    assert res.double_rounds() == []
+
+
+def test_dtypeflow_flags_f16_bf16_double_round():
+    import jax.numpy as jnp
+    from repro.audit import dtypeflow
+
+    def f(x):
+        return x.astype(jnp.bfloat16).astype(
+            jnp.float32).astype(jnp.float16).astype(jnp.float32)
+
+    res = dtypeflow.trace(f, __import__("jax").ShapeDtypeStruct(
+        (8, 8), jnp.float32))
+    assert res.double_rounds()
+
+
+# -- plan conformance ---------------------------------------------------
+
+def test_audit_blocked_clean():
+    from repro.audit.conformance import audit_blocked
+    res = audit_blocked(512, _cfg())
+    assert res.ok, [str(v) for v in res.violations]
+
+
+def test_audit_blocked_names_flipped_tile():
+    from repro.audit.conformance import audit_blocked
+    from repro.core.plan import PrecisionPlan
+    cfg = _cfg()
+    mut = PrecisionPlan(512, cfg)
+    mut.levels = mut.levels.copy()
+    i, j = mut.ntiles - 1, mut.ntiles - 2
+    mut.levels[i, j] = mut.levels[j, i] = (
+        0 if mut.levels[i, j] else len(cfg.levels) - 1)
+    res = audit_blocked(512, cfg, plan=mut)
+    hits = [v for v in res.violations
+            if v.rule in ("plan-table-mismatch", "plan-dot-precision")]
+    assert hits and any(f"({i}, {j})" in str(v) for v in hits)
+
+
+def test_audit_solve_clean():
+    from repro.audit.conformance import audit_solve
+    res = audit_solve(512, _cfg())
+    assert res.ok, [str(v) for v in res.violations]
+
+
+# -- kernel static checks -----------------------------------------------
+
+def test_kernel_audit_clean():
+    from repro.audit.kernelaudit import audit_kernels
+    res = audit_kernels()
+    assert res.ok, [str(v) for v in res.violations]
+
+
+def test_kernel_audit_flags_narrow_accumulator_and_oob_map():
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+    from repro.audit import kernelaudit
+
+    class _Scratch:
+        shape, dtype = (128, 128), jnp.bfloat16
+
+    call = kernelaudit.KernelCall(
+        name="_bad", entry="fake", grid=(2,),
+        in_specs=(pl.BlockSpec((128, 128), lambda i: (i + 1, 0)),),
+        out_specs=(pl.BlockSpec((128, 128), lambda i: (i, 0)),),
+        scratch=(_Scratch(),),
+        operands=(((256, 128), "float32"),),
+        out_shapes=(((256, 128), "float32"),))
+    viols = kernelaudit._index_violations(call, "t")
+    assert any(v.rule == "kernel-index-bounds" for v in viols)
+    res = kernelaudit.audit_kernels()          # real kernels stay clean
+    assert res.ok
+
+
+def test_kernel_audit_vmem_budget_trips():
+    from repro.audit.kernelaudit import audit_kernels
+    res = audit_kernels(vmem_budget=1024)      # absurdly small budget
+    assert any(v.rule == "kernel-vmem-budget" for v in res.violations)
+
+
+# -- lint pack ----------------------------------------------------------
+
+def test_lint_repo_clean():
+    """Regression for the literal sweep: kernels/ must stay free of
+    hardcoded narrow dtypes and 65504, db.py jax-import-free (modulo the
+    documented pragma), search.py timer-confined."""
+    from repro.audit.lint import lint_repo
+    res = lint_repo()
+    assert res.ok, [str(v) for v in res.violations]
+
+
+def test_lint_flags_planted_violations(tmp_path):
+    src = tmp_path / "src" / "repro"
+    (src / "core").mkdir(parents=True)
+    (src / "tune").mkdir()
+    (src / "kernels").mkdir()
+    (src / "core" / "plan.py").write_text("import jax.numpy as jnp\n")
+    (src / "tune" / "db.py").write_text(
+        "def f():\n    from jax import devices\n    return devices\n")
+    (src / "kernels" / "k.py").write_text(
+        "import jax.numpy as jnp\n"
+        "A = jnp.float16\n"
+        "B = jnp.float32\n"          # wide: allowed
+        "C = 65504.0\n")
+    (src / "tune" / "search.py").write_text(
+        "import time\n"
+        "import numpy as np\n"
+        "def timeit(fn):\n    return time.perf_counter()\n"
+        "def bad():\n    return time.time(), np.random.default_rng()\n")
+    from repro.audit.lint import lint_repo
+    rules = sorted({v.rule for v in lint_repo(tmp_path).violations})
+    assert rules == ["db-stdlib-only", "kernel-dtype-literal",
+                     "plan-trace-free", "search-injected-timer"]
+    by_rule = {}
+    for v in lint_repo(tmp_path).violations:
+        by_rule.setdefault(v.rule, []).append(v)
+    # wide f32 literal not flagged; f16 + 65504 both are
+    assert len(by_rule["kernel-dtype-literal"]) == 2
+    # time.* inside timeit is allowed; time.time + unseeded rng outside not
+    assert len(by_rule["search-injected-timer"]) == 2
+
+
+def test_lint_pragma_suppresses(tmp_path):
+    src = tmp_path / "src" / "repro"
+    for d in ("core", "tune", "kernels"):
+        (src / d).mkdir(parents=True)
+    (src / "core" / "plan.py").write_text(
+        "import jax  # audit: allow(plan-trace-free)\n")
+    (src / "tune" / "db.py").write_text("")
+    (src / "tune" / "search.py").write_text("")
+    from repro.audit.lint import lint_repo
+    assert lint_repo(tmp_path).ok
+
+
+# -- mutation self-test (the full detection regression) -----------------
+
+def test_selftest_catches_all_mutations():
+    from repro.audit.selftest import run_selftest
+    res = run_selftest()
+    assert res.ok, [str(v) for v in res.violations]
+
+
+# -- HLO reconciliation -------------------------------------------------
+
+def test_hlo_single_reconciles_exactly():
+    from repro.audit.hloaudit import audit_hlo_single
+    res = audit_hlo_single(512, _cfg())
+    errors = [v for v in res.violations if v.severity == "error"]
+    assert not errors, [str(v) for v in errors]
+
+
+def test_perf_gate_validates_audit_report(tmp_path):
+    """tools/perf_gate.py audit — accepts a clean report, rejects one
+    with errors and one with a wrong schema."""
+    import subprocess
+    import sys
+    rep = build_report("smoke", [CheckResult("demo", "t", [])])
+    good = tmp_path / "good.json"
+    good.write_text(json.dumps(rep))
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps(build_report(
+        "smoke", [CheckResult("demo", "t",
+                              [Violation("r", "t", "boom")])])))
+    garbled = tmp_path / "garbled.json"
+    garbled.write_text('{"schema": 999}')
+    cmd = [sys.executable, "tools/perf_gate.py", "audit", "--json"]
+    assert subprocess.run(cmd + [str(good)]).returncode == 0
+    assert subprocess.run(cmd + [str(bad)]).returncode != 0
+    assert subprocess.run(cmd + [str(garbled)]).returncode != 0

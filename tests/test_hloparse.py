@@ -1,0 +1,169 @@
+"""Fixture-HLO suite for the census parser.
+
+Hand-written HLO text pinning the parser behaviors the precision auditor
+leans on: nested while-loop trip multipliers, tuple-typed carries,
+typed-inline vs name-resolved dot operands, mixed-dtype operand
+classification, and per-wire-dtype collective bytes staying
+byte-compatible with the aggregate counters.
+"""
+import pytest
+
+from repro.launch import hloparse
+
+# -- fixtures -----------------------------------------------------------
+
+# dot inside a while(3) whose body contains a while(4): multiplier 12
+NESTED_WHILES = """\
+HloModule nested
+
+%inner_cond (arg.i: (f32[128,128], s32[])) -> pred[] {
+  %arg.i = (f32[128,128], s32[]) parameter(0)
+  %it.i = s32[] get-tuple-element((f32[128,128], s32[]) %arg.i), index=1
+  %c4 = s32[] constant(4)
+  ROOT %lt.i = pred[] compare(s32[] %it.i, s32[] %c4), direction=LT
+}
+
+%inner_body (arg.ib: (f32[128,128], s32[])) -> (f32[128,128], s32[]) {
+  %arg.ib = (f32[128,128], s32[]) parameter(0)
+  %x = f32[128,128] get-tuple-element((f32[128,128], s32[]) %arg.ib), index=0
+  %dot.i = f32[128,128] dot(f32[128,128] %x, f32[128,128] %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %it.ib = s32[] get-tuple-element((f32[128,128], s32[]) %arg.ib), index=1
+  %c1 = s32[] constant(1)
+  %inc = s32[] add(s32[] %it.ib, s32[] %c1)
+  ROOT %tup.ib = (f32[128,128], s32[]) tuple(f32[128,128] %dot.i, s32[] %inc)
+}
+
+%outer_cond (arg.o: (f32[128,128], s32[])) -> pred[] {
+  %arg.o = (f32[128,128], s32[]) parameter(0)
+  %it.o = s32[] get-tuple-element((f32[128,128], s32[]) %arg.o), index=1
+  %c3 = s32[] constant(3)
+  ROOT %lt.o = pred[] compare(s32[] %it.o, s32[] %c3), direction=LT
+}
+
+%outer_body (arg.ob: (f32[128,128], s32[])) -> (f32[128,128], s32[]) {
+  %arg.ob = (f32[128,128], s32[]) parameter(0)
+  %w.i = (f32[128,128], s32[]) while((f32[128,128], s32[]) %arg.ob), condition=%inner_cond, body=%inner_body
+  ROOT %out.ob = (f32[128,128], s32[]) copy((f32[128,128], s32[]) %w.i)
+}
+
+ENTRY %main (p0: f32[128,128]) -> f32[128,128] {
+  %p0 = f32[128,128] parameter(0)
+  %c0 = s32[] constant(0)
+  %tup0 = (f32[128,128], s32[]) tuple(f32[128,128] %p0, s32[] %c0)
+  %w.o = (f32[128,128], s32[]) while((f32[128,128], s32[]) %tup0), condition=%outer_cond, body=%outer_body
+  ROOT %res = f32[128,128] get-tuple-element((f32[128,128], s32[]) %w.o), index=0
+}
+"""
+
+# mixed-dtype typed-inline operands + an untyped operand list
+MIXED_DOTS = """\
+HloModule mixed
+
+ENTRY %main (a: bf16[64,256], b: f16[256,32]) -> f32[64,32] {
+  %a = bf16[64,256] parameter(0)
+  %b = f16[256,32] parameter(1)
+  %dot.t = f32[64,32] dot(bf16[64,256] %a, f16[256,32] %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %a32 = f32[64,256] convert(bf16[64,256] %a)
+  %b32 = f32[256,32] convert(f16[256,32] %b)
+  %dot.u = f32[64,32] dot(%a32, %b32), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %sum = f32[64,32] add(f32[64,32] %dot.t, f32[64,32] %dot.u)
+}
+"""
+
+# quantized wire: u16 gather + f32 all-reduce, annotated trip count
+COLLECTIVES = """\
+HloModule coll
+
+%loop_cond (arg.c: (u16[256,256], s32[])) -> pred[] {
+  %arg.c = (u16[256,256], s32[]) parameter(0)
+  %it.c = s32[] get-tuple-element((u16[256,256], s32[]) %arg.c), index=1
+  %c2 = s32[] constant(2)
+  ROOT %lt.c = pred[] compare(s32[] %it.c, s32[] %c2), direction=LT
+}
+
+%loop_body (arg.b: (u16[256,256], s32[])) -> (u16[256,256], s32[]) {
+  %arg.b = (u16[256,256], s32[]) parameter(0)
+  %q = u16[256,256] get-tuple-element((u16[256,256], s32[]) %arg.b), index=0
+  %ag = u16[4,256,256] all-gather(u16[256,256] %q), replica_groups={{0,1,2,3}}, dimensions={0}
+  %sl = u16[256,256] slice(u16[4,256,256] %ag), slice={[0:1], [0:256], [0:256]}
+  %it.b = s32[] get-tuple-element((u16[256,256], s32[]) %arg.b), index=1
+  %c1 = s32[] constant(1)
+  %inc.b = s32[] add(s32[] %it.b, s32[] %c1)
+  ROOT %tup.b = (u16[256,256], s32[]) tuple(u16[256,256] %sl, s32[] %inc.b)
+}
+
+ENTRY %main (p0: u16[256,256], p1: f32[128,128]) -> f32[128,128] {
+  %p0 = u16[256,256] parameter(0)
+  %c0 = s32[] constant(0)
+  %tup0 = (u16[256,256], s32[]) tuple(u16[256,256] %p0, s32[] %c0)
+  %w = (u16[256,256], s32[]) while((u16[256,256], s32[]) %tup0), condition=%loop_cond, body=%loop_body, backend_config={"known_trip_count":{"n":"2"}}
+  %p1 = f32[128,128] parameter(0)
+  ROOT %ar = f32[128,128] all-reduce(f32[128,128] %p1), replica_groups={}, to_apply=%add_comp
+}
+
+%add_comp (x: f32[], y: f32[]) -> f32[] {
+  %x = f32[] parameter(0)
+  %y = f32[] parameter(1)
+  ROOT %add.c = f32[] add(f32[] %x, f32[] %y)
+}
+"""
+
+
+# -- nested while multipliers ------------------------------------------
+
+def test_nested_while_trip_multiplier():
+    cen = hloparse.census(NESTED_WHILES)
+    # 2 * 128*128 (out) * 128 (contraction) per execution, 3*4 executions
+    per = 2.0 * 128 * 128 * 128
+    assert cen["flops"] == pytest.approx(12 * per)
+    assert cen["dot_flops_by_dtype"] == {"f32xf32": pytest.approx(12 * per)}
+
+
+def test_nested_while_loops_reported():
+    cen = hloparse.census(NESTED_WHILES)
+    trips = dict(cen["loops"])
+    assert trips["w.o"] == 3 and trips["w.i"] == 4
+
+
+# -- dot operand dtype classification ----------------------------------
+
+def test_mixed_dtype_typed_and_untyped_operands():
+    cen = hloparse.census(MIXED_DOTS)
+    per = 2.0 * 64 * 32 * 256
+    by = cen["dot_flops_by_dtype"]
+    # typed-inline operands read straight off the line ...
+    assert by["bf16xf16"] == pytest.approx(per)
+    # ... untyped operands resolve through the computation's symbol table
+    assert by["f32xf32"] == pytest.approx(per)
+    assert cen["flops"] == pytest.approx(sum(by.values()))
+
+
+def test_dot_flops_by_dtype_sums_to_aggregate():
+    for hlo in (NESTED_WHILES, MIXED_DOTS):
+        cen = hloparse.census(hlo)
+        assert sum(cen["dot_flops_by_dtype"].values()) == pytest.approx(
+            cen["flops"])
+
+
+# -- collective wire dtypes --------------------------------------------
+
+def test_collective_bytes_by_wire_dtype():
+    cen = hloparse.census(COLLECTIVES)
+    by = cen["collective_bytes_by_dtype"]
+    # u16 gather rides the annotated known_trip_count=2 while loop
+    assert by["u16"] == pytest.approx(2 * 4 * 256 * 256 * 2)
+    assert by["f32"] == pytest.approx(128 * 128 * 4)
+
+
+def test_collective_bytes_byte_compatible_with_aggregate():
+    cen = hloparse.census(COLLECTIVES)
+    agg = sum(v["bytes"] for v in cen["collectives"].values())
+    assert sum(cen["collective_bytes_by_dtype"].values()) == pytest.approx(
+        agg)
+    assert cen["collectives"]["all-gather"]["count"] == 2
+    assert cen["collectives"]["all-reduce"]["count"] == 1
+
+
+def test_known_trip_count_annotation_wins():
+    cen = hloparse.census(COLLECTIVES)
+    assert dict(cen["loops"])["w"] == 2

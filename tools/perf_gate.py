@@ -143,6 +143,27 @@ def check_schema(payload, name) -> list[str]:
     return errs
 
 
+def gate_audit(payload) -> list[str]:
+    """Precision-audit report gate: schema-valid AND zero errors.
+
+    The audit CLI already exits nonzero on errors; this gate re-checks
+    the uploaded JSON artifact so a truncated or stale report cannot
+    pass CI on exit code alone."""
+    src = os.path.join(_ROOT, "src")
+    if src not in sys.path:
+        sys.path.insert(0, src)
+    from repro.audit.report import validate_report
+    errs = validate_report(payload)
+    if errs:
+        return errs
+    n_err = payload["summary"]["errors"]
+    if n_err:
+        rules = sorted({v["rule"] for v in payload["violations"]
+                        if v.get("severity", "error") == "error"})
+        errs.append(f"audit report carries {n_err} error(s): {rules}")
+    return errs
+
+
 def gate_db(payload) -> list[str]:
     """Tuning-database schema validation (delegates to repro.tune.db)."""
     src = os.path.join(_ROOT, "src")
@@ -157,7 +178,8 @@ def gate_db(payload) -> list[str]:
 # ---------------------------------------------------------------------------
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("gate", choices=("cholesky", "dist", "schema", "db"))
+    ap.add_argument("gate",
+                    choices=("cholesky", "dist", "schema", "db", "audit"))
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="artifact path(s); default: the repo-root "
                          "BENCH_* file(s) for the gate")
@@ -177,6 +199,14 @@ def main(argv=None) -> int:
         if not args.json:
             ap.error("db gate needs --json <tuning-db.json>")
         errs = gate_db(_load(args.json))
+    elif args.gate == "audit":
+        if not args.json:
+            ap.error("audit gate needs --json <audit-report.json>")
+        errs = gate_audit(_load(args.json))
+        if not errs:
+            s = _load(args.json)["summary"]
+            print(f"audit gate OK: {s['checks']} checks, "
+                  f"{s['warns']} warnings")
     else:
         default = os.path.join(_ROOT, f"BENCH_{args.gate}.json")
         payload = _load(args.json or default)
