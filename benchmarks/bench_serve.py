@@ -9,6 +9,10 @@ Measures the two serve-side claims of the batched request loop:
     sweep is an O(n^2) GEMV + dispatch round-trip per request; the
     batched sweep is one BLAS3-shaped GEMM for the whole batch. GATED:
     batched must beat sequential once >= 4 requests share a factor.
+  * continuous vs. window batching — staggered mixed-target arrivals
+    against an oversubscribed slot block; continuous batching (mid-
+    flight column join/retire) must sustain req/s >= the windowed
+    scheduler at r >= 8 (gated by ``tools/perf_gate.py serve`` in CI).
   * fused vs. unfused residual — the Pallas ``r = b - A x`` kernel
     against the XLA oracle, REQUIRED to agree allclose in the residual
     dtype (the acceptance gate; on CPU the fused kernel runs in
@@ -35,9 +39,11 @@ if _ROOT not in sys.path:
 
 from benchmarks.util import emit, spd_matrix, timeit  # noqa: E402
 from repro.kernels import ops, ref  # noqa: E402
-from repro.serve import BatchScheduler, SolverEngine  # noqa: E402
+from repro.serve import (BatchScheduler, SolveOptions,  # noqa: E402
+                         SolverEngine)
 
 LADDER = "f16_f32"
+_OPTS6 = SolveOptions(target_digits=6.0, cache_key="bench")
 
 
 def _bench_request_loop(n, counts, ladder=LADDER):
@@ -50,14 +56,13 @@ def _bench_request_loop(n, counts, ladder=LADDER):
               for _ in range(r)]
 
         def seq():
-            return [eng.solve(a, b, target_digits=6.0,
-                              cache_key="bench")[0] for b in bs]
+            return [eng.solve(a, b, _OPTS6)[0] for b in bs]
 
         sch = BatchScheduler(eng, max_batch=max(counts))
 
         def batched():
             for b in bs:
-                sch.submit(a, b, target_digits=6.0, cache_key="bench")
+                sch.submit(a, b, _OPTS6)
             return [x for x, _ in sch.drain().values()]
 
         t_seq = timeit(seq, warmup=1, iters=3)
@@ -75,6 +80,65 @@ def _bench_request_loop(n, counts, ladder=LADDER):
             raise AssertionError(
                 f"batched serving slower than sequential at n={n}, "
                 f"r={r}: speedup {speedup:.2f}")
+
+
+def _bench_continuous(n, r, ladder=LADDER):
+    """Staggered-arrival continuous-vs-window race — the headline row.
+
+    R requests with mixed accuracy targets (alternating 3 / 6 digits)
+    arrive 2 ms apart against ``slots = r // 2`` capacity, so the block
+    is always oversubscribed. The windowed scheduler makes each request
+    wait for its batching window and holds every window open for its
+    slowest member; the continuous scheduler joins arrivals mid-flight
+    and retires easy columns early, freeing their slots. Rows carry
+    ``req_per_s`` and ``speedup_vs_window``; ``tools/perf_gate.py
+    serve`` gates continuous >= window at r >= 8 (per-column accuracy
+    is asserted here — every request must report ``converged``).
+    """
+    import time
+
+    a = spd_matrix(n)
+    rng = np.random.default_rng(2)
+    slots = max(2, r // 2)
+    eng = SolverEngine(ladder, max_sweeps=8)
+    eng.factor(a, cache_key="bench")     # exclude the one-off O(n^3) cost
+    bs = [(a @ rng.standard_normal(n)).astype(np.float32)
+          for _ in range(r)]
+    opts = [SolveOptions(target_digits=(3.0 if i % 2 else 6.0),
+                         cache_key="bench") for i in range(r)]
+
+    def race(sch):
+        sch.start()
+        try:
+            t0 = time.perf_counter()
+            futs = []
+            for b, o in zip(bs, opts):
+                futs.append(sch.submit_async(a, b, o))
+                time.sleep(2e-3)         # staggered arrivals
+            outs = [f.result(timeout=300) for f in futs]
+            wall = time.perf_counter() - t0
+        finally:
+            sch.stop()
+        bad = [i for i, (_, info) in enumerate(outs) if not info.converged]
+        assert not bad, f"requests missed their accuracy target: {bad}"
+        return wall * 1e6
+
+    walls = {}
+    for mode in ("window", "continuous"):
+        def mk():
+            if mode == "window":
+                return BatchScheduler(eng, max_batch=slots,
+                                      max_wait_ms=10.0)
+            return BatchScheduler(eng, max_batch=slots, continuous=True)
+        race(mk())                       # warmup: compile the refine paths
+        walls[mode] = sorted(race(mk()) for _ in range(3))[1]   # median
+    t_win, t_cont = walls["window"], walls["continuous"]
+    speedup = t_win / t_cont
+    emit(f"serve_window_{ladder}_n{n}_r{r}", t_win,
+         f"req_per_s={r / (t_win * 1e-6):.1f};slots={slots}")
+    emit(f"serve_continuous_{ladder}_n{n}_r{r}", t_cont,
+         f"req_per_s={r / (t_cont * 1e-6):.1f};"
+         f"speedup_vs_window={speedup:.2f};converged=True;slots={slots}")
 
 
 def _bench_residual(n, k=8):
@@ -104,6 +168,8 @@ def _bench_residual(n, k=8):
 def run(sizes=(512, 1024), counts=(1, 2, 4, 8, 16)):
     for n in sizes:
         _bench_request_loop(n, counts)
+    for r in [c for c in counts if c >= 8]:
+        _bench_continuous(min(sizes), r)
     _bench_residual(max(sizes))
 
 

@@ -20,7 +20,8 @@ import numpy as np
 
 from repro import configs
 from repro.models import transformer as T
-from repro.serve import BatchScheduler, SolverEngine, engine
+from repro.serve import (BatchScheduler, SolveOptions,
+                         SolverEngine, generate)
 
 
 def solver_demo(n: int, n_requests: int, ladder: str):
@@ -39,12 +40,14 @@ def solver_demo(n: int, n_requests: int, ladder: str):
     eng.factor(a, cache_key="demo")
 
     t0 = time.time()
-    seq = [eng.solve(a, b, target_digits=t, cache_key="demo")
+    seq = [eng.solve(a, b, SolveOptions(target_digits=t,
+                                    cache_key="demo"))
            for b, t in zip(bs, targets)]
     t_seq = time.time() - t0
 
     t0 = time.time()
-    ids = [sch.submit(a, b, target_digits=t, cache_key="demo")
+    ids = [sch.submit(a, b, SolveOptions(target_digits=t,
+                                     cache_key="demo"))
            for b, t in zip(bs, targets)]
     out = sch.drain()
     t_bat = time.time() - t0
@@ -98,7 +101,7 @@ def main():
             (args.batch, cfg.n_img_tokens, cfg.d_model))
 
     t0 = time.time()
-    out = engine.generate(params, prompt, cfg, n_tokens=args.new_tokens,
+    out = generate(params, prompt, cfg, n_tokens=args.new_tokens,
                           max_len=args.prompt_len + args.new_tokens)
     dt = time.time() - t0
     toks = args.batch * args.new_tokens

@@ -1,6 +1,6 @@
 """Repo lint pack: AST rules for the layering invariants the audits rely on.
 
-Four rules, each protecting an invariant that the runtime checks in this
+Five rules, each protecting an invariant that the runtime checks in this
 package *assume* rather than verify:
 
 * **plan-trace-free** — ``core/plan.py`` must not import jax. The whole
@@ -20,6 +20,13 @@ package *assume* rather than verify:
   clock only inside the injected-timer default (``timeit``); everywhere
   else timing flows through the ``timer`` parameter, and RNG must be
   seeded. This keeps the autotuner replayable in tests with a fake timer.
+* **serve-public-surface** — in-repo callers outside ``src/repro/serve/``
+  (the rest of ``src/repro``, ``benchmarks/``, ``examples/``) import
+  serving names only from ``repro.serve``, never from its submodules
+  (``repro.serve.engine`` etc.). The serve ``__init__`` is the curated
+  public API; submodule layout is free to change between PRs only while
+  nothing outside the package depends on it. ``tests/`` are exempt —
+  white-box tests may reach into internals.
 
 Suppress a single line with ``# audit: allow(<rule>)``.
 
@@ -43,7 +50,11 @@ _MAGIC_CONSTS = {65504, 65504.0}
 _ALLOW_RE = re.compile(r"#\s*audit:\s*allow\(([a-z0-9-]+)\)")
 
 RULES = ("plan-trace-free", "db-stdlib-only", "kernel-dtype-literal",
-         "search-injected-timer")
+         "search-injected-timer", "serve-public-surface")
+
+#: repro.serve submodules that are implementation layout, not API
+_SERVE_SUBMODULES = {"engine", "scheduler", "metrics", "frontend",
+                     "options"}
 
 
 def repo_root() -> Path:
@@ -106,6 +117,30 @@ class _Lint:
                     f"magic range constant {node.value} at line "
                     f"{node.lineno}; use repro.core.precision.RMAX")
 
+    def serve_surface_only(self):
+        why = ("serving names are public only via repro.serve "
+               "(docs/SERVING.md); submodule layout is private")
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.name.startswith("repro.serve."):
+                        self.flag("serve-public-surface", node,
+                                  f"imports {a.name} at line "
+                                  f"{node.lineno}; {why}")
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                if node.module.startswith("repro.serve."):
+                    self.flag("serve-public-surface", node,
+                              f"imports from {node.module} at line "
+                              f"{node.lineno}; {why}")
+                elif node.module == "repro.serve":
+                    for a in node.names:
+                        if a.name in _SERVE_SUBMODULES:
+                            self.flag(
+                                "serve-public-surface", node,
+                                f"from repro.serve import {a.name} at "
+                                f"line {node.lineno} reaches the "
+                                f"submodule; {why}")
+
     def timer_confined(self):
         stack: list[str] = []
 
@@ -162,6 +197,17 @@ def lint_repo(root: Path | None = None) -> CheckResult:
     for kp in sorted((src / "kernels").glob("*.py")):
         run(f"kernels/{kp.name}", _Lint.no_narrow_dtype_literals)
     run("tune/search.py", _Lint.timer_confined)
+    # serve-public-surface sweeps everything outside the serve package
+    # itself; tests/ stay exempt (white-box tests reach into internals)
+    sweep = [p for p in sorted(src.rglob("*.py"))
+             if "serve" not in p.relative_to(src).parts[:1]]
+    for base in (root / "benchmarks", root / "examples"):
+        sweep.extend(sorted(base.glob("*.py")))
+    for p in sweep:
+        rel = str(p.relative_to(root))
+        lint = _Lint(p, rel)
+        lint.serve_surface_only()
+        viols.extend(lint.viols)
     return CheckResult("lint", "src/repro", viols)
 
 

@@ -42,6 +42,7 @@ from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from repro.core.precision import DTYPES, PrecisionConfig
@@ -128,6 +129,31 @@ def _colnorm(v):
     return jnp.linalg.norm(v, axis=0) if v.ndim == 2 else jnp.linalg.norm(v)
 
 
+def _masked_sweep(sweep: Callable, resid: Callable, relnorm: Callable,
+                  x, r, rel, bx, brel, its, stall, act):
+    """One per-column-masked refinement sweep — the shared inner step.
+
+    Both refinement drivers run exactly this math per sweep: the jitted
+    window loop (:func:`_refine_loop`) inside a ``lax.while_loop``, and
+    the re-entrant slot stepper (:class:`RefineStepper`) once per host
+    visit, so a column's trajectory is identical whichever loop drives
+    it (the continuous==window determinism contract, pinned by
+    tests/test_serve_continuous.py).  ``act`` masks the sweep: frozen
+    columns keep their iterate, their residual columns are zeroed out of
+    the sweep input, and their bookkeeping (best iterate, stall counter,
+    sweep count) does not advance.
+    """
+    rm = r * act.astype(r.dtype)             # mask frozen residuals
+    xn = jnp.where(act, sweep(x, rm), x)     # frozen columns keep x
+    rn = resid(xn)
+    reln = jnp.where(act, relnorm(rn), rel)
+    improved = reln < brel                   # new best this sweep?
+    bx = jnp.where(act & improved, xn, bx)
+    brel = jnp.where(act, jnp.minimum(reln, brel), brel)
+    stall = jnp.where(act, jnp.where(improved, 0, stall + 1), stall)
+    return xn, rn, reln, bx, brel, its + act.astype(jnp.int32), stall
+
+
 def _refine_loop(sweep: Callable, resid: Callable, relnorm: Callable, x0,
                  rcfg: RefineConfig, tol=None) -> RefineResult:
     """Shared outer loop: run ``sweep`` until tol / max_sweeps / stall,
@@ -170,20 +196,186 @@ def _refine_loop(sweep: Callable, resid: Callable, relnorm: Callable, x0,
     def body(s):
         x, r, rel, bx, brel, hist, its, stall, i = s
         act = active(brel, stall)
-        rm = r * act.astype(r.dtype)             # mask frozen residuals
-        xn = jnp.where(act, sweep(x, rm), x)     # frozen columns keep x
-        rn = resid(xn)
-        reln = jnp.where(act, relnorm(rn), rel)
+        xn, rn, reln, bx, brel, its, stall = _masked_sweep(
+            sweep, resid, relnorm, x, r, rel, bx, brel, its, stall, act)
         hist = hist.at[i + 1].set(jnp.where(act, reln, jnp.nan))
-        improved = reln < brel                   # new best this sweep?
-        bx = jnp.where(act & improved, xn, bx)
-        brel = jnp.where(act, jnp.minimum(reln, brel), brel)
-        stall = jnp.where(act, jnp.where(improved, 0, stall + 1), stall)
-        return (xn, rn, reln, bx, brel, hist, its + act.astype(jnp.int32),
-                stall, i + 1)
+        return (xn, rn, reln, bx, brel, hist, its, stall, i + 1)
 
     _, _, _, bx, brel, hist, its, _, _ = lax.while_loop(cond, body, state)
     return RefineResult(bx, brel, hist, its, brel <= tol)
+
+
+# ---------------------------------------------------------------------------
+# re-entrant slot-block refinement (continuous batching)
+# ---------------------------------------------------------------------------
+class SlotState(NamedTuple):
+    """Pytree state of a :class:`RefineStepper` slot block.
+
+    One RHS column per slot; ``(n, S)`` arrays hold the block, ``(S,)``
+    arrays the per-slot bookkeeping.  Empty slots are all-zero with
+    ``occ=False``, ``bnorm=1`` — algebraically inert (their residual is
+    0, their correction is 0) so they cost nothing but their share of
+    the block GEMM.
+    """
+
+    x: jax.Array       # (n, S) current iterate (residual dtype)
+    r: jax.Array       # (n, S) carried residual b - A x
+    b: jax.Array       # (n, S) right-hand sides
+    bx: jax.Array      # (n, S) best iterate seen per slot
+    rel: jax.Array     # (S,) latest relative residual
+    brel: jax.Array    # (S,) best relative residual
+    bnorm: jax.Array   # (S,) ||b|| denominators (1 for empty slots)
+    tol: jax.Array     # (S,) per-slot tolerance
+    occ: jax.Array     # (S,) bool: slot holds a live column
+    its: jax.Array     # (S,) int32 sweeps taken
+    stall: jax.Array   # (S,) int32 consecutive non-improving sweeps
+
+
+class RefineStepper:
+    """Re-entrant, slot-addressed refinement loop — the continuous-
+    batching core (vLLM's idiom applied to IR sweeps).
+
+    :func:`_refine_loop` runs a whole refinement *window* inside one
+    ``lax.while_loop``: every column joins at sweep 0 and the batch
+    returns when the last column exits.  The stepper runs the SAME
+    per-column-masked sweep (:func:`_masked_sweep`, jitted once per
+    ``(n, slots)`` shape) but yields to the host between sweeps, so a
+    serving loop can **retire** converged/stalled columns mid-flight
+    (freeing their slots) and **join** newly arrived RHS columns into
+    the running block without waiting for a window boundary.
+
+    Classic IR is column-local — the correction, residual and scaling
+    all act per column — so a column's trajectory is bitwise identical
+    whether it runs here or in a window, and independent of which
+    co-tenants share its block.  GMRES-IR's joint Krylov space is NOT
+    column-local; continuous serving therefore only accepts
+    ``method="ir"`` (the scheduler windows GMRES requests).
+
+    ``correct(r)`` applies the cheap factor (already per-column scaled,
+    e.g. :func:`scaled_solve`); ``resid(x, b)`` forms ``b - A x`` in the
+    residual precision for the whole block (the fused-kernel seam).
+    Host-side helpers (:meth:`active_mask`, :meth:`done_mask`,
+    :meth:`retire`, :meth:`join`) move only ``(S,)``-sized vectors over
+    the device boundary; the block itself stays resident.
+    """
+
+    def __init__(self, correct: Callable, resid: Callable, *, n: int,
+                 slots: int, rcfg: RefineConfig):
+        assert slots >= 1, slots
+        self.n, self.slots, self.rcfg = n, slots, rcfg
+        self.rdtype = rcfg.rdtype()
+        self._correct, self._resid = correct, resid
+        self._step = jax.jit(self._step_impl)
+
+    # -- state constructors -------------------------------------------------
+    def init(self) -> SlotState:
+        n, s, dt = self.n, self.slots, self.rdtype
+        z, zs = jnp.zeros((n, s), dt), jnp.zeros((s,), dt)
+        return SlotState(x=z, r=z, b=z, bx=z, rel=zs, brel=zs,
+                         bnorm=jnp.ones((s,), dt), tol=zs,
+                         occ=jnp.zeros((s,), bool),
+                         its=jnp.zeros((s,), jnp.int32),
+                         stall=jnp.zeros((s,), jnp.int32))
+
+    def join(self, state: SlotState, idx, b_cols, x0_cols,
+             tols) -> SlotState:
+        """Insert columns into free slots mid-flight.
+
+        ``idx`` are free slot indices (``len(idx)`` columns), ``b_cols``
+        / ``x0_cols`` the ``(n, k)`` right-hand sides and initial
+        iterates (the caller's base solve — unscaled, exactly like the
+        window path's ``x0``), ``tols`` the per-column tolerances.  The
+        block residual is recomputed once; live columns' residuals are
+        reproduced bitwise (``r`` always equals ``resid(x, b)``), so a
+        join never perturbs an in-flight column.
+        """
+        idx = jnp.asarray(idx, jnp.int32)
+        b_cols = jnp.asarray(b_cols, self.rdtype)
+        x0_cols = jnp.asarray(x0_cols, self.rdtype)
+        new = jnp.zeros((self.slots,), bool).at[idx].set(True)
+        x = state.x.at[:, idx].set(x0_cols)
+        b = state.b.at[:, idx].set(b_cols)
+        bnorm = state.bnorm.at[idx].set(
+            jnp.maximum(_colnorm(b_cols), _TINY).astype(self.rdtype))
+        r = self._resid(x, b)
+        rel = jnp.where(new, (_colnorm(r) / bnorm).astype(self.rdtype),
+                        state.rel)
+        return SlotState(
+            x=x, r=r, b=b, bx=state.bx.at[:, idx].set(x0_cols),
+            rel=rel, brel=jnp.where(new, rel, state.brel), bnorm=bnorm,
+            tol=state.tol.at[idx].set(jnp.asarray(tols, self.rdtype)),
+            occ=state.occ | new,
+            its=state.its.at[idx].set(0), stall=state.stall.at[idx].set(0))
+
+    # -- the sweep ----------------------------------------------------------
+    def _active(self, state: SlotState):
+        return (state.occ & (state.brel > state.tol) & (state.stall < 2)
+                & (state.its < self.rcfg.max_sweeps))
+
+    def _step_impl(self, state: SlotState):
+        act = self._active(state)
+
+        def resid(x):
+            return self._resid(x, state.b)
+
+        def relnorm(r):
+            return (_colnorm(r) / state.bnorm).astype(self.rdtype)
+
+        def sweep(x, rm):
+            return x + self._correct(rm).astype(self.rdtype)
+
+        xn, rn, reln, bx, brel, its, stall = _masked_sweep(
+            sweep, resid, relnorm, state.x, state.r, state.rel, state.bx,
+            state.brel, state.its, state.stall, act)
+        return SlotState(x=xn, r=rn, b=state.b, bx=bx, rel=reln,
+                         brel=brel, bnorm=state.bnorm, tol=state.tol,
+                         occ=state.occ, its=its, stall=stall), act
+
+    def step(self, state: SlotState):
+        """One masked sweep over the block; returns ``(state, act)``
+        where ``act`` is the numpy mask of slots the sweep advanced."""
+        state, act = self._step(state)
+        return state, np.asarray(act)
+
+    # -- host-side bookkeeping ----------------------------------------------
+    def active_mask(self, state: SlotState):
+        """Numpy mask of slots that would advance on the next sweep."""
+        return np.asarray(self._active(state))
+
+    def done_mask(self, state: SlotState):
+        """Numpy mask of occupied slots that are finished (converged,
+        stalled twice, or out of sweeps) and ready to retire."""
+        return np.asarray(state.occ) & ~self.active_mask(state)
+
+    def retire(self, state: SlotState, idx):
+        """Free slots ``idx``; returns ``(state, results)``.
+
+        ``results[i]`` is ``(x, relres, sweeps, converged)`` for slot
+        ``idx[i]`` — the BEST iterate seen (the window loop's contract),
+        its relative residual, sweep count and convergence flag.  The
+        freed slots are zeroed so they stay algebraically inert; a
+        retired column is never touched again (its result is copied out
+        here, before the slot is recycled).
+        """
+        ja = jnp.asarray(idx, jnp.int32)
+        xs = state.bx[:, ja]                     # one device gather
+        brel = np.asarray(state.brel[ja])
+        its = np.asarray(state.its[ja])
+        conv = brel <= np.asarray(state.tol[ja])
+        results = [(xs[:, i], float(brel[i]), int(its[i]), bool(conv[i]))
+                   for i in range(len(idx))]
+        zc = jnp.zeros((self.n, len(idx)), self.rdtype)
+        zv = jnp.zeros((len(idx),), self.rdtype)
+        zi = jnp.zeros((len(idx),), jnp.int32)
+        state = SlotState(
+            x=state.x.at[:, ja].set(zc), r=state.r.at[:, ja].set(zc),
+            b=state.b.at[:, ja].set(zc), bx=state.bx.at[:, ja].set(zc),
+            rel=state.rel.at[ja].set(zv), brel=state.brel.at[ja].set(zv),
+            bnorm=state.bnorm.at[ja].set(jnp.ones_like(zv)),
+            tol=state.tol.at[ja].set(zv),
+            occ=state.occ.at[ja].set(False),
+            its=state.its.at[ja].set(zi), stall=state.stall.at[ja].set(zi))
+        return state, results
 
 
 def refine_operator(matvec: Callable, correct: Callable, b, x0,

@@ -39,7 +39,7 @@ from repro.launch import specs as SP
 from repro.launch.mesh import make_production_mesh
 from repro.models import transformer as T
 from repro.optim import AdamWConfig, TreeNewtonConfig
-from repro.serve import engine
+from repro.serve import prefill_step, serve_step
 from repro.train import TrainConfig, make_train_step
 
 # ---------------------------------------------------------------------------
@@ -92,7 +92,7 @@ def build_cell(arch: str, shape_name: str, *, multi_pod: bool,
         b_shard = SH.batch_shardings(b_struct, sharder, mesh)
         c_struct = SP.cache_struct(cfg, shape.global_batch, shape.seq_len)
         c_shard = SH.cache_shardings(c_struct, cfg, sharder, mesh)
-        fn = functools.partial(engine.prefill_step, cfg=cfg,
+        fn = functools.partial(prefill_step, cfg=cfg,
                                sharder=sharder)
         jf = jax.jit(fn, in_shardings=(p_shard, b_shard),
                      out_shardings=(NamedSharding(mesh, P()), c_shard))
@@ -104,7 +104,7 @@ def build_cell(arch: str, shape_name: str, *, multi_pod: bool,
         c_shard = SH.cache_shardings(c_struct, cfg, sharder, mesh)
         tok_shard = SH.batch_shardings({"t": tok_struct}, sharder,
                                        mesh)["t"]
-        fn = functools.partial(engine.serve_step, cfg=cfg, sharder=sharder)
+        fn = functools.partial(serve_step, cfg=cfg, sharder=sharder)
         jf = jax.jit(fn, in_shardings=(p_shard, c_shard, tok_shard,
                                        NamedSharding(mesh, P())),
                      out_shardings=(NamedSharding(mesh, P()), c_shard),

@@ -1,5 +1,51 @@
-from repro.serve.engine import (SolveInfo, SolverEngine,  # noqa: F401
-                                generate, matrix_fingerprint, prefill_step,
-                                serve_step)
-from repro.serve.scheduler import (BatchScheduler,  # noqa: F401
-                                   SchedulerOverload, SolveRequest)
+"""The curated serving surface — import serving names from HERE.
+
+``repro.serve`` is the public API of the serving stack; the submodules
+(``engine``, ``scheduler``, ``frontend``, ``metrics``, ``options``) are
+implementation layout and may move between PRs. The audit lint pack
+enforces this boundary for in-repo callers (rule ``serve-public-surface``,
+src/repro/audit/lint.py).
+
+The stack, bottom-up:
+
+* :class:`SolverEngine` — accuracy-targeted SPD solves over a
+  fingerprint-guarded factor cache (``solve`` / ``solve_batched``).
+* :class:`BatchScheduler` — cross-request batching: windowed drains or
+  continuous batching (``continuous=True``; mid-flight column
+  join/retire). Raises :class:`SchedulerOverload` on admission-control
+  rejection.
+* :class:`ServeFrontend` — tiered load shedding (degrade digits before
+  rejecting) on top of the scheduler.
+* :class:`SolveOptions` — the one per-request policy object every entry
+  point accepts; :class:`SolveInfo` the per-request result metadata.
+* :class:`MetricsTracker` — the protocol a pluggable metrics sink
+  implements; :class:`InMemoryMetrics` / :class:`NullMetrics` the
+  bundled implementations.
+
+``prefill_step`` / ``serve_step`` / ``generate`` are the model-serving
+side (decode-shape dry runs, examples/serve.py).
+"""
+from repro.serve.engine import (SolveInfo, SolverEngine, generate,
+                                matrix_fingerprint, prefill_step, serve_step)
+from repro.serve.frontend import ServeFrontend
+from repro.serve.metrics import InMemoryMetrics, MetricsTracker, NullMetrics
+from repro.serve.options import SolveOptions
+from repro.serve.scheduler import (BatchScheduler, SchedulerOverload,
+                                   SolveRequest)
+
+__all__ = [
+    "BatchScheduler",
+    "InMemoryMetrics",
+    "MetricsTracker",
+    "NullMetrics",
+    "SchedulerOverload",
+    "ServeFrontend",
+    "SolveInfo",
+    "SolveOptions",
+    "SolveRequest",
+    "SolverEngine",
+    "generate",
+    "matrix_fingerprint",
+    "prefill_step",
+    "serve_step",
+]

@@ -33,12 +33,14 @@ from jax.sharding import NamedSharding, PartitionSpec
 from repro.core.blocked import diag_tri_inv
 from repro.core.distributed import dist_cholesky, dist_cholesky_solve
 from repro.core.precision import PAPER_CONFIGS, PrecisionConfig
-from repro.core.refine import (RefineConfig, RefineResult, gmres_operator,
-                               refine_operator, scaled_solve)
-from repro.core.solve import cholesky_padded, refine_solve
+from repro.core.refine import (RefineConfig, RefineResult, RefineStepper,
+                               gmres_operator, refine_operator, scaled_solve)
+from repro.core.solve import cholesky_padded, refine_solve, solve_factored
 from repro.kernels import ops
 from repro.models import transformer as T
 from repro.models.common import ModelConfig, NO_SHARD, Sharder
+from repro.serve.metrics import MetricsTracker, NullMetrics
+from repro.serve.options import SolveOptions, resolve_options
 
 
 def prefill_step(params, batch, cfg: ModelConfig,
@@ -107,9 +109,29 @@ def matrix_fingerprint(a, samples: int = 8):
     return (a.shape, str(a.dtype), np.asarray(probe).tobytes())
 
 
+def _strip_history(h):
+    """Nan-padded ``[sweeps+1, k]`` history -> per-column float tuples.
+
+    Drops the window loop's nan padding (sweeps a column never ran /
+    ran frozen) so the windowed and continuous paths hand back the
+    same trajectory for the same column.
+    """
+    return tuple(tuple(float(v) for v in col[~np.isnan(col)])
+                 for col in h.T)
+
+
 @dataclasses.dataclass
 class SolveInfo:
-    """Per-request serving metadata returned next to the solution."""
+    """Per-request serving metadata returned next to the solution.
+
+    ``queue_ms``/``shed_tier``/``deadline_expired`` are stamped by the
+    serving layer (scheduler/frontend); direct engine calls leave their
+    defaults.  ``history`` is the per-column relative-residual
+    trajectory — ``history[j][0]`` the pre-refinement residual of this
+    request's column ``j``, then one entry per sweep that column
+    actually ran (the window loop's nan padding is stripped, so the
+    continuous and windowed paths report identical histories).
+    """
 
     ladder: str                 # PAPER_CONFIGS key actually used
     method: str                 # "ir" | "gmres"
@@ -121,6 +143,10 @@ class SolveInfo:
     batch_size: int = 1         # requests sharing this refine call
     batch_index: int = 0        # this request's slot in the batch
     distributed: bool = False   # factor/solves ran on the engine's mesh
+    queue_ms: float = 0.0       # submit -> solve-start latency
+    shed_tier: int = 0          # 0 = as requested, 1 = degraded target
+    deadline_expired: bool = False  # retired at its deadline, best-so-far
+    history: tuple = ()         # per-column residual trajectories
 
 
 class SolverEngine:
@@ -170,7 +196,8 @@ class SolverEngine:
                  max_cached_factors: int = 16, mesh=None,
                  dist_threshold: int | None = None,
                  dist_axis: str = "model",
-                 dist_compress: bool | None = None, tuning_db=None):
+                 dist_compress: bool | None = None, tuning_db=None,
+                 metrics: MetricsTracker | None = None):
         if isinstance(ladder, str):
             self.ladder_name = ladder
             self.cfg = PAPER_CONFIGS[ladder]
@@ -190,6 +217,10 @@ class SolverEngine:
         self.dist_compress = dist_compress
         #: injected TuningDB (tests); None = the committed per-backend DB
         self._tuning_db = tuning_db
+        #: pluggable metrics sink (repro.serve.metrics); shared by the
+        #: scheduler/frontend stacked on this engine unless overridden
+        self.metrics: MetricsTracker = (metrics if metrics is not None
+                                        else NullMetrics())
         if mesh is not None:
             assert dist_axis in mesh.shape, (dist_axis, mesh)
         #: cache_key -> (fingerprint, padded factor, diag-tile inverses),
@@ -198,6 +229,10 @@ class SolverEngine:
         #: scheduler's drain worker shares this cache with direct-call
         #: engine users on other threads.
         self._factors: collections.OrderedDict = collections.OrderedDict()
+        #: (cache_key, fingerprint, slots) -> (RefineStepper, base_solve):
+        #: a stepper's jitted sweep is cached per factor so re-activating
+        #: a continuous group doesn't recompile (same LRU bound)
+        self._steppers: collections.OrderedDict = collections.OrderedDict()
         self._cache_lock = threading.RLock()
 
     def _tuned(self, n: int, nshards: int):
@@ -327,13 +362,16 @@ class SolverEngine:
         """
         if cache_key is None:
             l, linvs = self._factorize(a)
+            self.metrics.inc("engine.factor_cache_miss")
             return l, linvs, False
         fp = fingerprint if fingerprint is not None else matrix_fingerprint(a)
         with self._cache_lock:
             hit = self._factors.get(cache_key)
             if hit is not None and hit[0] == fp:
                 self._factors.move_to_end(cache_key)
+                self.metrics.inc("engine.factor_cache_hit")
                 return hit[1], hit[2], True
+        self.metrics.inc("engine.factor_cache_miss")
         l, linvs = self._factorize(a)
         with self._cache_lock:
             self._factors[cache_key] = (fp, l, linvs)
@@ -345,54 +383,66 @@ class SolverEngine:
     def evict(self, cache_key):
         with self._cache_lock:
             self._factors.pop(cache_key, None)
+            for k in [k for k in self._steppers if k[0] == cache_key]:
+                self._steppers.pop(k)
 
     def cached_keys(self):
         """Cache keys currently held, least-recently-used first."""
         with self._cache_lock:
             return list(self._factors)
 
-    def solve(self, a, b, *, target_digits: float = 6.0,
-              method: str = "ir", cache_key=None):
-        """Solve A x = b to ``target_digits``; returns ``(x, SolveInfo)``.
+    def solve(self, a, b, options: SolveOptions | None = None, **kw):
+        """Solve A x = b per ``options``; returns ``(x, SolveInfo)``.
 
-        ``method="gmres"`` requests GMRES-IR for ill-conditioned systems
-        where classic IR stalls. ``b`` may be (n,) or (n, k); for a
-        multi-RHS ``b`` the SolveInfo aggregates across columns (max
-        sweeps/residual, all-converged).
+        ``options.method="gmres"`` requests GMRES-IR for ill-conditioned
+        systems where classic IR stalls. ``b`` may be (n,) or (n, k);
+        for a multi-RHS ``b`` the SolveInfo aggregates across columns
+        (max sweeps/residual, all-converged). Pre-``SolveOptions``
+        kwargs (``target_digits=``, ``method=``, ``cache_key=``) keep
+        working as deprecated aliases.
         """
-        xs, infos = self.solve_batched(a, [b], target_digits=target_digits,
-                                       method=method, cache_key=cache_key)
+        opts = resolve_options(options, kw, caller="SolverEngine.solve")
+        xs, infos = self.solve_batched(a, [b], opts)
         return xs[0], infos[0]
 
-    def solve_batched(self, a, bs, *, target_digits=6.0,
-                      method: str = "ir", cache_key=None,
-                      fingerprint=None):
+    def solve_batched(self, a, bs, options: SolveOptions | None = None,
+                      **kw):
         """Solve A x_i = b_i for a batch of RHS sharing one factor.
 
         ``bs`` is a sequence of (n,) vectors and/or (n, k_i) blocks (one
-        per request); ``target_digits`` is a scalar or a per-request
-        sequence. All RHS are stacked into a single multi-RHS refine
-        call whose per-column tolerances encode each request's target,
-        so converged columns freeze while slow ones keep sweeping.
-        Returns ``(xs, infos)`` aligned with ``bs``; each request's x
-        keeps its input arity (vector in, vector out) in the residual
-        precision.
+        per request); ``options.target_digits`` is a scalar or a
+        per-request sequence. All RHS are stacked into a single
+        multi-RHS refine call whose per-column tolerances encode each
+        request's target, so converged columns freeze while slow ones
+        keep sweeping. Returns ``(xs, infos)`` aligned with ``bs``; each
+        request's x keeps its input arity (vector in, vector out) in the
+        residual precision. Deprecated kwarg aliases as in
+        :meth:`solve` (plus ``fingerprint=``).
         """
+        opts = resolve_options(options, kw,
+                               caller="SolverEngine.solve_batched")
+        method = opts.method
         bs = [jnp.asarray(b) for b in bs]
         assert bs, "solve_batched needs at least one RHS"
         n = bs[0].shape[0]
         for b in bs:
             assert b.ndim in (1, 2) and b.shape[0] == n, b.shape
         cols = [1 if b.ndim == 1 else b.shape[1] for b in bs]
+        target_digits = opts.target_digits
         if np.isscalar(target_digits):
             target_digits = [target_digits] * len(bs)
         assert len(target_digits) == len(bs), (len(target_digits), len(bs))
         digits = [self._clamp(d) for d in target_digits]
-        col_tol = np.repeat([10.0 ** -d for d in digits], cols)
+        if opts.col_tol is not None:
+            col_tol = np.asarray(opts.col_tol, np.float64)
+            assert col_tol.shape == (sum(cols),), (col_tol.shape, cols)
+        else:
+            col_tol = np.repeat([10.0 ** -d for d in digits], cols)
         rcfg = RefineConfig(max_sweeps=self.max_sweeps,
                             tol=float(col_tol.min()), method=method,
                             gmres_restart=self.gmres_restart)
-        l, linvs, cached = self.factor(a, cache_key, fingerprint=fingerprint)
+        l, linvs, cached = self.factor(a, opts.cache_key,
+                                       fingerprint=opts.fingerprint)
         bmat = jnp.concatenate(
             [b[:, None] if b.ndim == 1 else b for b in bs], axis=1)
         dist = self._use_dist(n)
@@ -406,6 +456,12 @@ class SolverEngine:
         sweeps = np.atleast_1d(np.asarray(res.iterations))
         resid = np.atleast_1d(np.asarray(res.residual))
         conv = np.atleast_1d(np.asarray(res.converged))
+        hist = np.asarray(res.history)          # [S+1] or [S+1, k]
+        if hist.ndim == 1:
+            hist = hist[:, None]
+        self.metrics.inc("engine.requests", len(bs))
+        for s in sweeps:
+            self.metrics.observe("engine.sweeps_per_column", int(s))
         xs, infos = [], []
         off = 0
         for i, (b, k) in enumerate(zip(bs, cols)):
@@ -418,9 +474,65 @@ class SolverEngine:
                 residual=float(resid[sl].max()),
                 converged=bool(conv[sl].all()),
                 target_digits=digits[i], factor_cached=cached,
-                batch_size=len(bs), batch_index=i, distributed=dist))
+                batch_size=len(bs), batch_index=i, distributed=dist,
+                shed_tier=opts.shed_tier,
+                history=_strip_history(hist[:, sl])))
             off += k
         return xs, infos
+
+    def continuous_stepper(self, a, *, slots: int, cache_key=None,
+                           fingerprint=None):
+        """Factor ``a`` (through the cache) and return the continuous-
+        batching machinery bound to it: ``(stepper, base_solve, cached)``.
+
+        ``stepper`` is a :class:`repro.core.refine.RefineStepper` over a
+        ``slots``-wide RHS block — the re-entrant loop the scheduler's
+        continuous worker drives (join/step/retire between sweeps);
+        ``base_solve`` computes the initial iterate for joining columns
+        (the same unscaled factored solve the windowed path starts
+        from, so a column's trajectory is identical in either mode).
+        Classic IR only — GMRES-IR's joint Krylov space cannot retire
+        columns mid-restart — and single-device only (the scheduler
+        windows distributed-path requests).
+
+        The stepper (and its jitted sweep) is cached per
+        ``(cache_key, fingerprint, slots)`` next to the factor cache, so
+        re-activating a continuous group — the scheduler does this every
+        time its block drains and traffic returns — reuses the compiled
+        sweep instead of paying an XLA compile per activation.
+        """
+        a = jnp.asarray(a)
+        n = a.shape[-1]
+        assert not self._use_dist(n), \
+            "continuous batching is single-device; dist requests window"
+        fp = fingerprint if fingerprint is not None else matrix_fingerprint(a)
+        memo_key = (cache_key, fp, slots)
+        with self._cache_lock:
+            hit = self._steppers.get(memo_key)
+            if hit is not None:
+                self._steppers.move_to_end(memo_key)
+                return hit[0], hit[1], True
+        cfg = self._cfg_for(n)
+        l, linvs, cached = self.factor(a, cache_key, fingerprint=fp)
+        rcfg = RefineConfig(max_sweeps=self.max_sweeps, method="ir",
+                            gmres_restart=self.gmres_restart)
+        rdtype = rcfg.rdtype()
+        a_r = jnp.asarray(a, rdtype)
+
+        def base_solve(r):
+            return solve_factored(l, r.astype(l.dtype), cfg,
+                                  linvs=linvs).astype(rdtype)
+
+        def resid(x, b):
+            return ops.residual(a_r, x, b, impl=cfg.kernel_impl)
+
+        stepper = RefineStepper(scaled_solve(base_solve), resid,
+                                n=n, slots=slots, rcfg=rcfg)
+        with self._cache_lock:
+            self._steppers[memo_key] = (stepper, base_solve)
+            while len(self._steppers) > self.max_cached_factors:
+                self._steppers.popitem(last=False)
+        return stepper, base_solve, cached
 
 
 def _pick(logits, cfg: ModelConfig, temperature, rng, i):

@@ -30,7 +30,8 @@ Ordering guarantees (tested in tests/test_serve.py):
 
 This is a host-side loop by design (requests arrive from Python-land
 callers); the jit boundary is the stacked refine call inside
-``SolverEngine.solve_batched``.
+``SolverEngine.solve_batched`` (windowed mode) or the jitted slot sweep
+of :class:`~repro.core.refine.RefineStepper` (continuous mode).
 
 **Async drain** (docs/SERVING.md, "Sync vs async drain"): with
 ``max_wait_ms`` set and :meth:`BatchScheduler.start` called, a
@@ -47,7 +48,24 @@ engine's ``max_cached_factors``) is rejected with
 :class:`SchedulerOverload` instead of queued — a window with more
 distinct matrices than cache slots would evict factors still needed by
 later groups of the same window (thrash), so the backpressure lands on
-the client that would cause it.
+the client that would cause it. (For graduated backpressure — degrade
+the accuracy target before rejecting — stack a
+:class:`~repro.serve.frontend.ServeFrontend` on top.)
+
+**Continuous batching** (docs/SERVING.md, "Continuous batching"): with
+``continuous=True`` the worker replaces the batching *window* with a
+re-entrant slot loop (``max_batch`` slots wide) per factor group.
+Converged columns RETIRE between sweeps — their request's future
+resolves while neighbors keep refining — and freed slots are refilled
+mid-flight from queued requests sharing the factor fingerprint, so a
+request's latency tracks its own difficulty instead of the window's
+slowest member. Classic IR is column-local, so a column's trajectory is
+identical in either mode (tests/test_serve_continuous.py pins
+continuous == window column-for-column); GMRES-IR and distributed-path
+requests fall back to a windowed drain of their group. Per-request
+``deadline_ms`` is enforced between sweeps: an expired request retires
+immediately with its best-so-far iterate and ``SolveInfo
+.deadline_expired`` set.
 """
 from __future__ import annotations
 
@@ -59,28 +77,72 @@ from concurrent.futures import Future
 from typing import Any
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.serve.engine import SolveInfo, SolverEngine, matrix_fingerprint
+from repro.serve.metrics import MetricsTracker
+from repro.serve.options import SolveOptions, resolve_options
 
 
 class SchedulerOverload(RuntimeError):
     """Submission rejected by admission control (factor cache would
-    thrash). Clients should back off and resubmit, or raise the
-    engine's ``max_cached_factors`` / the scheduler's
-    ``max_pending_factors``."""
+    thrash) or by the frontend's hard shedding tier. Clients should back
+    off and resubmit, or raise the engine's ``max_cached_factors`` / the
+    scheduler's ``max_pending_factors`` / the frontend's
+    ``hard_pending``."""
 
 
 @dataclasses.dataclass
 class SolveRequest:
-    """One queued solve: A x = b to ``target_digits`` digits."""
+    """One queued solve: A x = b per ``options``.
+
+    ``options`` is the fully resolved per-request policy (scalar
+    ``target_digits``); ``submitted_at`` the ``time.monotonic()`` stamp
+    queue latency and deadlines are measured from. The flat accessors
+    (``req.target_digits`` etc.) are kept for callers that predate
+    :class:`~repro.serve.options.SolveOptions`.
+    """
 
     request_id: int
     a: Any
     b: Any
-    target_digits: float
-    method: str
-    cache_key: Any
+    options: SolveOptions
     n_cols: int                 # 1 for a vector b, k for an (n, k) block
+    submitted_at: float = 0.0   # time.monotonic() at submit
+
+    @property
+    def target_digits(self) -> float:
+        return self.options.target_digits
+
+    @property
+    def method(self) -> str:
+        return self.options.method
+
+    @property
+    def cache_key(self):
+        return self.options.cache_key
+
+    @property
+    def deadline_ms(self):
+        return self.options.deadline_ms
+
+    @property
+    def shed_tier(self) -> int:
+        return self.options.shed_tier
+
+
+@dataclasses.dataclass
+class _LiveRequest:
+    """A request currently holding slots in the continuous loop."""
+
+    req: SolveRequest
+    slots: list                  # slot indices still holding its columns
+    queue_ms: float              # submit -> join latency
+    deadline: float | None       # absolute monotonic deadline
+    cached: bool                 # factor_cached for its SolveInfo
+    hist: dict                   # col index -> [rel0, per-sweep rel, ...]
+    cols: dict = dataclasses.field(default_factory=dict)
+    expired: bool = False        # retired by deadline, not convergence
 
 
 class BatchScheduler:
@@ -98,12 +160,20 @@ class BatchScheduler:
     ``drain()`` stays available for synchronous use, but don't mix the
     two styles on one scheduler instance: the worker assumes it is the
     only drainer.
+
+    With ``continuous=True`` the worker runs the slot loop instead
+    (module docstring, "Continuous batching"); ``max_wait_ms`` is then
+    optional — arrivals join mid-flight, there is no window to bound.
+    ``metrics`` defaults to the engine's tracker so one injected sink
+    sees the whole serving stack.
     """
 
     def __init__(self, engine: SolverEngine | None = None, *,
                  max_batch: int | None = None,
                  max_wait_ms: float | None = None,
-                 max_pending_factors: int | None = None):
+                 max_pending_factors: int | None = None,
+                 continuous: bool = False,
+                 metrics: MetricsTracker | None = None):
         self.engine = engine if engine is not None else SolverEngine()
         if max_batch is None:
             # tuning-DB serving geometry for this ladder/backend
@@ -114,13 +184,17 @@ class BatchScheduler:
                 db=self.engine._tuning_db).max_batch
         assert max_batch >= 1, max_batch
         self.max_batch = max_batch
-        #: async batching window; None = sync-only scheduler
+        #: async batching window; None = sync-only (or continuous)
         self.max_wait_ms = max_wait_ms
+        #: continuous (slot-loop) worker instead of windowed drains
+        self.continuous = continuous
         #: admission-control bound on distinct pending factors
         self.max_pending_factors = (
             max_pending_factors if max_pending_factors is not None
             else self.engine.max_cached_factors)
         assert self.max_pending_factors >= 1, self.max_pending_factors
+        self.metrics: MetricsTracker = (metrics if metrics is not None
+                                        else self.engine.metrics)
         self._lock = threading.RLock()
         self._cv = threading.Condition(self._lock)
         self._worker: threading.Thread | None = None
@@ -144,20 +218,31 @@ class BatchScheduler:
     def __len__(self) -> int:
         return len(self._queue)
 
-    def submit(self, a, b, *, target_digits: float = 6.0,
-               method: str = "ir", cache_key=None) -> int:
-        """Enqueue a solve; returns the id ``drain()`` keys results by."""
+    def submit(self, a, b, options: SolveOptions | None = None,
+               **kw) -> int:
+        """Enqueue a solve; returns the id ``drain()`` keys results by.
+
+        Pre-``SolveOptions`` kwargs (``target_digits=``, ``method=``,
+        ``cache_key=``) keep working as deprecated aliases.
+        """
+        opts = resolve_options(options, kw, caller="BatchScheduler.submit")
         b = jnp.asarray(b)
         assert b.ndim in (1, 2), b.shape
-        assert method in ("ir", "gmres"), method
+        assert np.isscalar(opts.target_digits), (
+            "scheduler requests carry one target each; per-column "
+            "sequences belong to SolverEngine.solve_batched")
+        opts = dataclasses.replace(opts,
+                                   target_digits=float(opts.target_digits))
         # fingerprint at submit time so grouping can never batch two
         # different matrices that happen to share a cache_key
-        fp = self._fingerprint_of(a)
+        fp = (opts.fingerprint if opts.fingerprint is not None
+              else self._fingerprint_of(a))
         with self._cv:
             rid = self._next_id
             self._next_id += 1
-            req = SolveRequest(rid, a, b, float(target_digits), method,
-                               cache_key, 1 if b.ndim == 1 else b.shape[1])
+            req = SolveRequest(rid, a, b, opts,
+                               1 if b.ndim == 1 else b.shape[1],
+                               submitted_at=time.monotonic())
             self._fingerprints[rid] = fp
             if not self._queue:
                 self._window_start = time.monotonic()
@@ -166,23 +251,33 @@ class BatchScheduler:
         return rid
 
     # -- async drain --------------------------------------------------------
-    def submit_async(self, a, b, *, target_digits: float = 6.0,
-                     method: str = "ir", cache_key=None) -> Future:
+    def submit_async(self, a, b, options: SolveOptions | None = None,
+                     **kw) -> Future:
         """Enqueue a solve for the background worker; returns a Future
         resolving to ``(x, SolveInfo)``.
 
         Requires a running worker (:meth:`start`). Raises
         :class:`SchedulerOverload` when admission control rejects the
         request (the submission would put more distinct factors in
-        flight than the factor cache holds).
+        flight than the factor cache holds) and ``RuntimeError`` when
+        the scheduler is stopping — a submission racing :meth:`stop`
+        either completes (it beat the stop flag, so the worker's final
+        sweep drains it) or raises here; it is never silently dropped.
+        Deprecated kwarg aliases as in :meth:`submit`.
         """
-        fp = self._fingerprint_of(a)
+        opts = resolve_options(options, kw,
+                               caller="BatchScheduler.submit_async")
+        fp = (opts.fingerprint if opts.fingerprint is not None
+              else self._fingerprint_of(a))
+        opts = dataclasses.replace(opts, fingerprint=fp)
         with self._cv:
             assert self._worker is not None, (
                 "submit_async needs the async worker: call start() first")
-            self._admit((cache_key, fp))
-            rid = self.submit(a, b, target_digits=target_digits,
-                              method=method, cache_key=cache_key)
+            if self._stop_flag:
+                raise RuntimeError(
+                    "scheduler is stopping; submission refused")
+            self._admit((opts.cache_key, fp))
+            rid = self.submit(a, b, opts)
             fut: Future = Future()
             self._futures[rid] = fut
         return fut
@@ -198,8 +293,9 @@ class BatchScheduler:
 
     def start(self) -> None:
         """Spawn the background drain worker (idempotent)."""
-        assert self.max_wait_ms is not None, (
-            "async drain needs a batching window: pass max_wait_ms")
+        assert self.max_wait_ms is not None or self.continuous, (
+            "async drain needs a batching window (max_wait_ms) or "
+            "continuous=True")
         with self._cv:
             if self._worker is not None:
                 if self._worker.is_alive():
@@ -212,6 +308,14 @@ class BatchScheduler:
 
     def stop(self, timeout: float | None = None) -> None:
         """Stop the worker; pending requests are drained first.
+
+        A :meth:`submit_async` racing this call either completes (its
+        request landed before the stop flag was set, and the worker
+        drains the queue before exiting — the flag is set and checked
+        under the same lock as enqueue) or raises ``RuntimeError`` at
+        submission; its future is never silently dropped. As a backstop,
+        anything still queued with a future after the worker exits is
+        drained inline here.
 
         If ``timeout`` expires while the worker is still mid-drain, the
         worker stays registered (and stopping): a later :meth:`start`
@@ -228,9 +332,38 @@ class BatchScheduler:
         with self._cv:
             if not worker.is_alive():
                 self._worker = None
+        self._flush_leftovers()
+
+    def _flush_leftovers(self):
+        """Resolve futures of requests the dead worker never saw."""
+        while True:
+            with self._cv:
+                if self._worker is not None or not any(
+                        r.request_id in self._futures for r in self._queue):
+                    return
+            try:
+                results = self.drain()
+            except Exception as exc:  # noqa: BLE001 — forwarded to futures
+                with self._cv:
+                    for req in self.failed:
+                        fut = self._futures.pop(req.request_id, None)
+                        if fut is not None:
+                            fut.set_exception(exc)
+                continue
+            with self._cv:
+                for rid, out in results.items():
+                    fut = self._futures.pop(rid, None)
+                    if fut is not None:
+                        fut.set_result(out)
 
     def _pending_cols(self) -> int:
         return sum(r.n_cols for r in self._queue)
+
+    def pending_cols(self) -> int:
+        """Queued RHS columns not yet in a refine loop — the load signal
+        the :class:`~repro.serve.frontend.ServeFrontend` sheds on."""
+        with self._lock:
+            return self._pending_cols()
 
     def _run(self):
         """Worker loop: deadline-aware batching window, then one drain.
@@ -240,7 +373,11 @@ class BatchScheduler:
         pending request has waited ``max_wait_ms`` or the queue holds a
         full batch — so a lone request never waits longer than the
         window, while a burst inside it batches into one refine call.
+        ``continuous=True`` replaces the window with the slot loop
+        (:meth:`_run_continuous`).
         """
+        if self.continuous:
+            return self._run_continuous()
         while True:
             with self._cv:
                 while not self._queue and not self._stop_flag:
@@ -279,6 +416,247 @@ class BatchScheduler:
                     fut = self._futures.pop(rid, None)
                     if fut is not None:
                         fut.set_result(out)
+
+    # -- continuous batching ------------------------------------------------
+    def _run_continuous(self):
+        """Continuous worker: head-of-queue group -> slot refine loop.
+
+        Groups are served in order of their first-submitted request,
+        like windowed drains. GMRES-IR, distributed-path and
+        wider-than-the-block requests fall back to a windowed drain of
+        their group (:meth:`_drain_group`) — the slot loop only accepts
+        what can legally retire per column.
+        """
+        while True:
+            with self._cv:
+                while not self._queue and not self._stop_flag:
+                    self._cv.wait()
+                if not self._queue:         # stop requested, queue empty
+                    return
+                head = self._queue[0]
+                key = self._group_key(head)
+                n = head.b.shape[0]
+                wide = head.n_cols > self.max_batch
+            if (head.method != "ir" or wide
+                    or self.engine._use_dist(n)):
+                self._drain_group(key)
+            else:
+                self._continuous_group(key, head.a)
+
+    def _continuous_group(self, key, a):
+        """Run one factor group through the slot loop until drained.
+
+        Per iteration: admit queued group members into free slots
+        (mid-flight join), force-retire deadline-expired requests, run
+        one masked sweep, then retire converged/stalled/exhausted slots
+        and resolve any request whose last column just retired. The
+        loop exits when the block is empty and no matching request is
+        queued.
+        """
+        cache_key, fp, _ = key
+        stepper, base_solve, cached = self.engine.continuous_stepper(
+            a, slots=self.max_batch, cache_key=cache_key, fingerprint=fp)
+        state = stepper.init()
+        slot_owner: list = [None] * self.max_batch   # slot -> (rid, col)
+        live: dict[int, _LiveRequest] = {}
+        while True:
+            state = self._cb_admit(key, stepper, state, slot_owner, live,
+                                   base_solve, cached)
+            if not live:
+                return                      # block empty, queue has no match
+            state = self._cb_expire(stepper, state, slot_owner, live)
+            if not live:
+                continue
+            if stepper.active_mask(state).any():
+                state, stepped = stepper.step(state)
+                self.metrics.inc("scheduler.sweeps")
+                rel = np.asarray(state.rel)
+                for s in np.flatnonzero(stepped):
+                    owner = slot_owner[s]
+                    if owner is not None:
+                        live[owner[0]].hist[owner[1]].append(float(rel[s]))
+            self.metrics.gauge(
+                "scheduler.slot_occupancy",
+                float(np.asarray(state.occ).sum()) / self.max_batch)
+            done = [s for s in np.flatnonzero(stepper.done_mask(state))
+                    if slot_owner[s] is not None]
+            state = self._cb_retire(stepper, state, slot_owner, live, done,
+                                    expired=False)
+
+    def _cb_admit(self, key, stepper, state, slot_owner, live, base_solve,
+                  cached):
+        """Join queued group members into free slots (FIFO, no overtake:
+        a member that doesn't fit blocks later members of ITS group so
+        submission order holds; other groups are untouched)."""
+        room = sum(1 for o in slot_owner if o is None)
+        take: list[SolveRequest] = []
+        with self._cv:
+            blocked = False
+            rest = []
+            for r in self._queue:
+                if (self._group_key(r) == key and not blocked
+                        and r.n_cols <= room):
+                    take.append(r)
+                    room -= r.n_cols
+                else:
+                    if self._group_key(r) == key:
+                        blocked = True
+                    rest.append(r)
+            if take:
+                self._queue = rest
+                self._cv.notify_all()
+        if not take:
+            return state
+        now = time.monotonic()
+        free = [i for i, o in enumerate(slot_owner) if o is None]
+        bblk = jnp.concatenate(
+            [r.b[:, None] if r.b.ndim == 1 else r.b for r in take],
+            axis=1).astype(stepper.rdtype)
+        x0 = base_solve(bblk)               # the window path's x0, unscaled
+        tols = np.concatenate([
+            np.full(r.n_cols, 10.0 ** -self.engine._clamp(r.target_digits))
+            for r in take])
+        used = free[:bblk.shape[1]]
+        state = stepper.join(state, used, bblk, x0, tols)
+        rel = np.asarray(state.rel)
+        pos = 0
+        for r in take:
+            rslots = used[pos:pos + r.n_cols]
+            pos += r.n_cols
+            for ci, s in enumerate(rslots):
+                slot_owner[s] = (r.request_id, ci)
+            qms = (now - r.submitted_at) * 1e3
+            live[r.request_id] = _LiveRequest(
+                req=r, slots=list(rslots), queue_ms=qms,
+                deadline=(r.submitted_at + r.deadline_ms / 1e3
+                          if r.deadline_ms is not None else None),
+                cached=cached,
+                hist={ci: [float(rel[s])] for ci, s in enumerate(rslots)})
+            self.metrics.observe("scheduler.queue_ms", qms)
+        return state
+
+    def _cb_expire(self, stepper, state, slot_owner, live):
+        """Force-retire live requests whose deadline has passed; they
+        resolve with the best iterate seen so far."""
+        now = time.monotonic()
+        for rid in list(live):
+            lv = live[rid]
+            if lv.deadline is not None and now >= lv.deadline and lv.slots:
+                state = self._cb_retire(stepper, state, slot_owner, live,
+                                        list(lv.slots), expired=True)
+        return state
+
+    def _cb_retire(self, stepper, state, slot_owner, live, slots, *,
+                   expired):
+        """Retire ``slots`` and resolve requests with no columns left."""
+        if not slots:
+            return state
+        state, results = stepper.retire(state, slots)
+        finished = set()
+        for s, res in zip(slots, results):
+            rid, ci = slot_owner[s]
+            slot_owner[s] = None
+            lv = live[rid]
+            lv.slots.remove(s)
+            lv.cols[ci] = res
+            lv.expired = lv.expired or expired
+            if not lv.slots:
+                finished.add(rid)
+        for rid in finished:
+            self._cb_resolve(live.pop(rid))
+        return state
+
+    def _cb_resolve(self, lv: _LiveRequest):
+        """Assemble ``(x, SolveInfo)`` from retired columns and resolve
+        the request's future (or stash for a sync caller)."""
+        req = lv.req
+        k = req.n_cols
+        xcols = [lv.cols[ci][0] for ci in range(k)]
+        x = xcols[0] if req.b.ndim == 1 else jnp.stack(xcols, axis=1)
+        info = SolveInfo(
+            ladder=self.engine.ladder_name, method="ir",
+            sweeps=max(lv.cols[ci][2] for ci in range(k)),
+            residual=max(lv.cols[ci][1] for ci in range(k)),
+            converged=all(lv.cols[ci][3] for ci in range(k)),
+            target_digits=self.engine._clamp(req.target_digits),
+            factor_cached=lv.cached, queue_ms=lv.queue_ms,
+            shed_tier=req.shed_tier, deadline_expired=lv.expired,
+            history=tuple(tuple(lv.hist[ci]) for ci in range(k)))
+        self.metrics.inc("scheduler.requests")
+        if lv.expired:
+            self.metrics.inc("scheduler.deadline_expired")
+        with self._cv:
+            self._fingerprints.pop(req.request_id, None)
+            fut = self._futures.pop(req.request_id, None)
+            if fut is None:
+                self._stashed[req.request_id] = (x, info)
+        if fut is not None:
+            fut.set_result((x, info))
+
+    def _drain_group(self, key):
+        """Windowed drain of ONE group — the continuous worker's
+        fallback for GMRES-IR / distributed / oversized requests. A
+        failing chunk forwards its exception to its futures (and
+        ``self.failed``) without taking down the worker."""
+        with self._lock:
+            take = [r for r in self._queue if self._group_key(r) == key]
+            self._queue = [r for r in self._queue
+                           if self._group_key(r) != key]
+        for chunk in self._chunks(take):
+            start = time.monotonic()
+            try:
+                xs, infos = self._solve_chunk(chunk)
+            except Exception as exc:  # noqa: BLE001 — forwarded
+                with self._cv:
+                    self.failed = list(chunk)
+                    for req in chunk:
+                        self._fingerprints.pop(req.request_id, None)
+                        fut = self._futures.pop(req.request_id, None)
+                        if fut is not None:
+                            fut.set_exception(exc)
+                continue
+            for req, x, info in zip(chunk, xs, infos):
+                out = (x, self._stamp(info, req, start))
+                with self._cv:
+                    self._fingerprints.pop(req.request_id, None)
+                    fut = self._futures.pop(req.request_id, None)
+                    if fut is None:
+                        self._stashed[req.request_id] = out
+                if fut is not None:
+                    fut.set_result(out)
+
+    # -- shared drain plumbing ----------------------------------------------
+    def _solve_chunk(self, chunk: list[SolveRequest]):
+        """One stacked refine call for a chunk of grouped requests.
+
+        Deliberately routes through the engine's kwarg-alias path (with
+        the warning suppressed via ``_internal``) rather than a
+        positional ``SolveOptions``: tests and tools monkeypatch
+        ``engine.solve_batched`` with the kwarg-spread signature, and
+        this keeps that seam stable.
+        """
+        return self.engine.solve_batched(
+            chunk[0].a, [r.b for r in chunk],
+            target_digits=[r.target_digits for r in chunk],
+            method=chunk[0].method, cache_key=chunk[0].cache_key,
+            fingerprint=self._fingerprints[chunk[0].request_id],
+            _internal=True)
+
+    def _stamp(self, info: SolveInfo, req: SolveRequest,
+               start: float) -> SolveInfo:
+        """Fill the serving-layer SolveInfo fields for one request."""
+        qms = (start - req.submitted_at) * 1e3
+        self.metrics.observe("scheduler.queue_ms", qms)
+        self.metrics.inc("scheduler.requests")
+        # a windowed drain can't interrupt a running refine call, but it
+        # still reports requests whose deadline had passed before the
+        # solve even started
+        expired = (req.deadline_ms is not None and qms > req.deadline_ms)
+        if expired:
+            self.metrics.inc("scheduler.deadline_expired")
+        return dataclasses.replace(info, queue_ms=qms,
+                                   shed_tier=req.shed_tier,
+                                   deadline_expired=expired)
 
     def _fingerprint_of(self, a):
         """Memoized matrix_fingerprint: the O(n) device reduction + host
@@ -332,16 +710,13 @@ class BatchScheduler:
         try:
             for members in groups:
                 for chunk in self._chunks(members):
-                    fp = self._fingerprints[chunk[0].request_id]
+                    start = time.monotonic()
                     in_flight = chunk          # blamed if the solve raises
-                    xs, infos = self.engine.solve_batched(
-                        chunk[0].a, [r.b for r in chunk],
-                        target_digits=[r.target_digits for r in chunk],
-                        method=chunk[0].method,
-                        cache_key=chunk[0].cache_key, fingerprint=fp)
+                    xs, infos = self._solve_chunk(chunk)
                     in_flight = []
                     for req, x, info in zip(chunk, xs, infos):
-                        results[req.request_id] = (x, info)
+                        results[req.request_id] = (
+                            x, self._stamp(info, req, start))
                         self._fingerprints.pop(req.request_id, None)
         except BaseException:
             # only a chunk whose solve actually raised is abandoned; an

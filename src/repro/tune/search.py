@@ -223,7 +223,7 @@ def _tune_dist(n, levels, nshards, timer, log):
 def _tune_serving(levels, timer, log, *, n=256, n_rhs=16):
     """Scheduler batch-geometry race: chunked multi-RHS refine calls."""
     from repro.core.precision import PrecisionConfig
-    from repro.serve.engine import SolverEngine
+    from repro.serve import SolveOptions, SolverEngine
     cfg = PrecisionConfig(levels=levels, leaf=128)
     eng = SolverEngine(cfg, max_sweeps=4)
     a = _spd(n, seed=3)
@@ -234,8 +234,9 @@ def _tune_serving(levels, timer, log, *, n=256, n_rhs=16):
         def run(mb=mb):
             xs = []
             for i in range(0, n_rhs, mb):
-                x, _ = eng.solve_batched(a, bs[i:i + mb], target_digits=4,
-                                         cache_key="tune")
+                x, _ = eng.solve_batched(
+                    a, bs[i:i + mb],
+                    SolveOptions(target_digits=4, cache_key="tune"))
                 xs.extend(x)
             return xs
         cands[f"us_serve_batch{mb}"] = lambda run=run: (run, ())
@@ -248,8 +249,8 @@ def _tune_serving(levels, timer, log, *, n=256, n_rhs=16):
                key=lambda mb: (meas[f"us_serve_batch{mb}"], mb))
     # batching window sized to one solve call: a request never waits
     # longer than the latency of the work it would join
-    t1 = timer(lambda: eng.solve(a, bs[0], target_digits=4,
-                                 cache_key="tune")[0])
+    t1 = timer(lambda: eng.solve(a, bs[0], SolveOptions(
+        target_digits=4, cache_key="tune"))[0])
     meas["us_serve_single"] = round(t1, 1)
     max_wait_ms = float(min(50.0, max(1.0, round(t1 / 1e3, 1))))
     return {"max_batch": int(best), "max_wait_ms": max_wait_ms}, meas

@@ -148,3 +148,35 @@ def test_db_gate_on_committed_database():
     payload = json.load(open(path))
     assert perf_gate.gate_db(payload) == []
     assert perf_gate.gate_db({"version": 1}) != []
+
+
+# ---------------------------------------------------------------------------
+# serve gate (continuous vs window)
+# ---------------------------------------------------------------------------
+def serve_row(r, *, speedup=1.5, converged=True, n=256):
+    return {"name": f"serve_continuous_f16_f32_n{n}_r{r}",
+            "us_per_call": 1000.0,
+            "derived": f"req_per_s=50.0;speedup_vs_window={speedup:.2f};"
+                       f"converged={converged};slots={max(2, r // 2)}"}
+
+
+def test_serve_gate_passes_and_catches():
+    ok = {"smoke": True, "rows": [serve_row(8), serve_row(16)]}
+    assert perf_gate.gate_serve(ok) == []
+    # continuous losing the race at r>=8 is the regression this exists for
+    slow = {"rows": [serve_row(8, speedup=0.8)]}
+    assert any("lost to the window" in e for e in perf_gate.gate_serve(slow))
+    # a speed win that missed accuracy targets is not a win
+    inacc = {"rows": [serve_row(8, converged=False)]}
+    assert any("accuracy" in e for e in perf_gate.gate_serve(inacc))
+    assert perf_gate.gate_serve({"rows": []}) != []
+
+
+def test_serve_gate_requires_r8_rows():
+    """An artifact with only sub-threshold races must fail loudly — it
+    means bench_serve ran without the continuous race."""
+    small = {"rows": [serve_row(4),
+                      {"name": "serve_window_f16_f32_n256_r8",
+                       "us_per_call": 900.0, "derived": "req_per_s=9.0"}]}
+    assert any("no serve_continuous" in e
+               for e in perf_gate.gate_serve(small))

@@ -20,6 +20,10 @@ Replaces the inline heredoc gates that used to live in
   db         a tuning-database JSON — schema validation via
              repro.tune.db.validate_db (the one non-stdlib import,
              itself dependency-free).
+  serve      bench-serve.json — continuous batching must sustain req/s
+             >= the windowed scheduler on the staggered mixed-target
+             race at r >= 8, with every request converged (the
+             continuous-batching acceptance gate).
 
 Every gate is a function returning a list of error strings (empty =
 pass); the CLI prints them and exits non-zero if any gate failed.
@@ -31,6 +35,7 @@ import glob
 import json
 import math
 import os
+import re
 import sys
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -47,6 +52,7 @@ MIN_BLOCKED_VS_TREE = 1.0       # single-device, n >= 2048
 MIN_COMPRESSED_VS_F32 = 0.95    # distributed collectives, n >= 2048
 MIN_TUNED_ABOVE_XOVER = 0.95    # tuned engine at/above the crossover
 MAX_REL_VS_SINGLE = 5e-2        # distributed-vs-single-device agreement
+MIN_CONTINUOUS_VS_WINDOW = 1.0  # staggered req/s race, r >= 8
 
 
 def _load(path):
@@ -120,6 +126,56 @@ def gate_dist(payload) -> list[str]:
     return errs
 
 
+_CONT_ROW = re.compile(r"^serve_continuous_.+_r(\d+)$")
+
+
+def _derived(row) -> dict:
+    """Parse a bench row's ``k=v;k=v`` derived string into a dict."""
+    out = {}
+    for part in str(row.get("derived", "")).split(";"):
+        if "=" in part:
+            k, v = part.split("=", 1)
+            out[k] = v
+    return out
+
+
+def gate_serve(payload) -> list[str]:
+    """Continuous-batching gate (bench-serve.json).
+
+    Every ``serve_continuous_*_rR`` row with R >= 8 (the staggered
+    mixed-target race) must carry ``speedup_vs_window >= 1.0`` and
+    ``converged=True``; an artifact with no such rows fails — it means
+    bench_serve ran without the continuous race.
+    """
+    rows = payload.get("rows", [])
+    if not rows:
+        return ["bench-serve.json has no rows"]
+    errs, gated = [], 0
+    for row in rows:
+        m = _CONT_ROW.match(str(row.get("name", "")))
+        if not m or int(m.group(1)) < 8:
+            continue
+        gated += 1
+        d = _derived(row)
+        try:
+            speedup = float(d.get("speedup_vs_window", "nan"))
+        except ValueError:
+            speedup = float("nan")
+        if not speedup >= MIN_CONTINUOUS_VS_WINDOW:
+            errs.append(
+                f"{row['name']}: continuous batching lost to the window "
+                f"scheduler (speedup_vs_window="
+                f"{d.get('speedup_vs_window')!r} "
+                f"< {MIN_CONTINUOUS_VS_WINDOW})")
+        if d.get("converged") != "True":
+            errs.append(f"{row['name']}: accuracy targets not met "
+                        f"(converged={d.get('converged')!r})")
+    if not gated:
+        errs.append("no serve_continuous_*_r>=8 rows found — bench_serve "
+                    "ran without the continuous race")
+    return errs
+
+
 def check_schema(payload, name) -> list[str]:
     """Structural check for one BENCH_*.json artifact."""
     errs = []
@@ -179,7 +235,8 @@ def gate_db(payload) -> list[str]:
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("gate",
-                    choices=("cholesky", "dist", "schema", "db", "audit"))
+                    choices=("cholesky", "dist", "schema", "db", "audit",
+                             "serve"))
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="artifact path(s); default: the repo-root "
                          "BENCH_* file(s) for the gate")
@@ -207,6 +264,15 @@ def main(argv=None) -> int:
             s = _load(args.json)["summary"]
             print(f"audit gate OK: {s['checks']} checks, "
                   f"{s['warns']} warnings")
+    elif args.gate == "serve":
+        payload = _load(args.json
+                        or os.path.join(_ROOT, "bench-serve.json"))
+        errs = gate_serve(payload)
+        if not errs:
+            rows = [(r["name"], _derived(r).get("speedup_vs_window"))
+                    for r in payload["rows"]
+                    if _CONT_ROW.match(str(r.get("name", "")))]
+            print(f"serve gate OK: {rows}")
     else:
         default = os.path.join(_ROOT, f"BENCH_{args.gate}.json")
         payload = _load(args.json or default)
